@@ -1,0 +1,51 @@
+"""Fig. 2 reproduction: Eq. 7 bound vs lambda for K = 1, 100, inf and n sweep.
+
+Exact arithmetic (the paper's own parameters: L=1, sigma^2=1, eta=0.01,
+F1=1, F_inf=0), so this reproduces the figure quantitatively. Prints the
+paper's headline checkpoints:
+  * K->inf, n=6: bound stays O(1e-2) for all lambda <= 0.98,
+  * K->inf, n=20: the lambda threshold sits near 0.84.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.bound import BoundParams, dpsgd_bound, lambda_threshold, network_term, sync_term
+
+__all__ = ["main"]
+
+
+def main() -> list[tuple]:
+    rows = []
+    lams = np.array([0.0, 0.2, 0.4, 0.6, 0.8, 0.84, 0.9, 0.95, 0.98, 0.99])
+    t0 = time.perf_counter()
+    for n in (6, 20, 100):
+        p = BoundParams(n=n)
+        for k in (1.0, 100.0, np.inf):
+            for lam in lams:
+                b = float(dpsgd_bound(p, lam, k))
+                rows.append(("fig2_bound", n, k, float(lam), b,
+                             float(sync_term(p, k)),
+                             float(network_term(p, lam))))
+    us = (time.perf_counter() - t0) / len(rows) * 1e6
+
+    p6 = BoundParams(n=6)
+    p20 = BoundParams(n=20)
+    checks = {
+        "bound(n=6,K=inf,lam=0.98)": float(dpsgd_bound(p6, 0.98, np.inf)),
+        "paper_claim_O(1e-2)": 1e-2,
+        "threshold(n=20,K=inf)": lambda_threshold(p20, np.inf),
+        "paper_claim_0.84": 0.84,
+        "threshold(n=6,K=inf)": lambda_threshold(p6, np.inf),
+    }
+    print("name,us_per_call,derived")
+    print(f"fig2_bound,{us:.3f},\"{checks}\"")
+    for r in rows[:0]:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

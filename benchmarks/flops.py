@@ -1,0 +1,197 @@
+"""Analytic per-step FLOP / HBM-byte models for every (arch x shape) cell.
+
+Why analytic: XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+so any program with scanned layers (all of ours) or microbatch accumulation
+under-reports flops/bytes by the trip count (verified empirically: phi3.5-moe
+train flops drop ~4x when microbatch=4 is added — EXPERIMENTS.md §Roofline).
+The roofline compute/memory terms therefore come from the closed forms below,
+which model what the *implementation actually executes* (e.g. the chunked
+attention path computes the full S x T score square — the causal 2x is
+charged, and recovered by the Pallas kernel in §Perf).
+
+Conventions: one MAC = 2 FLOPs; backward = 2x forward matmul FLOPs
+(grad-weights + grad-activations); train = fwd + bwd (3x) + optimizer/mixing
+elementwise (charged to bytes, not flops).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["param_count", "active_param_count", "cell_flops_bytes",
+           "model_flops"]
+
+
+def _attn_dims(cfg: ModelConfig) -> tuple[int, int]:
+    return cfg.q_dim, cfg.kv_dim
+
+
+def _layer_param_counts(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    out: dict[str, float] = {}
+    qd, kvd = _attn_dims(cfg)
+    if cfg.mla is not None:
+        m = cfg.mla
+        out["attn"] = d * cfg.n_heads * (m.qk_nope_dim + m.qk_rope_dim) \
+            + d * (m.kv_lora_rank + m.qk_rope_dim) \
+            + m.kv_lora_rank * cfg.n_heads * (m.qk_nope_dim + m.v_head_dim) \
+            + cfg.n_heads * m.v_head_dim * d
+    else:
+        out["attn"] = d * qd + 2 * d * kvd + qd * d
+    gate = 1 if cfg.mlp_kind in ("swiglu", "geglu") else 0
+    out["mlp"] = (2 + gate) * d * cfg.d_ff
+    if cfg.moe is not None:
+        mc = cfg.moe
+        out["moe_router"] = d * mc.n_experts
+        out["moe_experts"] = mc.n_experts * 3 * d * mc.d_ff_expert
+        out["moe_shared"] = mc.n_shared * 3 * d * mc.d_ff_expert
+        out["moe_active"] = (mc.top_k + mc.n_shared) * 3 * d * mc.d_ff_expert
+        out["mlp_dense"] = (2 + gate) * d * (cfg.dense_d_ff or cfg.d_ff)
+    if cfg.rglru is not None:
+        dr = cfg.rglru.d_rnn
+        out["rglru"] = 2 * d * dr + 2 * dr * dr + dr * d + cfg.rglru.conv_width * dr
+    if cfg.rwkv is not None:
+        rw = cfg.rwkv
+        out["rwkv_tm"] = 5 * d * d + 2 * d * rw.decay_lora
+        out["rwkv_cm"] = d * d + 2 * d * (rw.d_ff or cfg.d_ff)
+    return out
+
+
+def param_count(cfg: ModelConfig) -> float:
+    """Total parameters (matches jax.eval_shape counts to ~1%)."""
+    lp = _layer_param_counts(cfg)
+    kinds = [cfg.pattern[i % len(cfg.pattern)] for i in range(cfg.n_layers)]
+    total = 0.0
+    for i, kind in enumerate(kinds):
+        if kind == "rwkv":
+            total += lp["rwkv_tm"] + lp["rwkv_cm"]
+            continue
+        total += lp["rglru"] if kind == "rglru" else lp["attn"]
+        if cfg.moe is not None and i >= cfg.first_k_dense:
+            total += lp["moe_router"] + lp["moe_experts"] + lp["moe_shared"]
+        elif cfg.moe is not None:
+            total += lp["mlp_dense"]
+        else:
+            total += lp["mlp"]
+        if cfg.is_encdec and i >= cfg.encoder_layers:
+            total += lp["attn"]  # cross attention
+    total += cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return total
+
+
+def active_param_count(cfg: ModelConfig) -> float:
+    """Per-token active params (MoE: top-k + shared only)."""
+    if cfg.moe is None:
+        return param_count(cfg)
+    lp = _layer_param_counts(cfg)
+    total = param_count(cfg)
+    total -= (cfg.n_layers - cfg.first_k_dense) * lp["moe_experts"]
+    total += (cfg.n_layers - cfg.first_k_dense) * (
+        cfg.moe.top_k * 3 * cfg.d_model * cfg.moe.d_ff_expert)
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6 * N_active * D (train) or 2 * N_active * D (decode).
+
+    Enc-dec: a cell of seq_len S maps to S/2 source + S/2 target positions
+    (DESIGN.md §6), and each token passes through roughly half the stack, so
+    D = B * S/2 over the full N approximates the useful compute."""
+    seq = shape.seq_len if shape.kind != "decode" else 1
+    if cfg.is_encdec and shape.kind != "decode":
+        seq = seq // 2
+    tokens = shape.global_batch * seq
+    n = active_param_count(cfg)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def _mixer_exec_flops(cfg: ModelConfig, kind: str, b: float, s: float,
+                      t: float, decode: bool,
+                      attention: str = "chunked") -> float:
+    """Forward execution FLOPs of one token-mixer layer (scores+values only;
+    projections are charged via params). ``attention='flash'`` models the
+    Pallas kernel's causal block skipping (~(t+1)/2 effective keys)."""
+    if kind == "rwkv":
+        d = cfg.d_model
+        c = 32.0 if not decode else 1.0
+        # chunked WKV: pairwise (c x c x D) + state term per chunk
+        return b * s * d * (3 * c + 4 * (cfg.rwkv.head_size if cfg.rwkv else 64))
+    if kind == "rglru":
+        return b * s * 10 * (cfg.rglru.d_rnn if cfg.rglru else cfg.d_model)
+    if cfg.mla is not None:
+        dqk = cfg.n_heads * (cfg.mla.qk_nope_dim + cfg.mla.qk_rope_dim)
+        dv = cfg.n_heads * cfg.mla.v_head_dim
+    else:
+        dqk = dv = cfg.q_dim
+    if kind == "local" and cfg.window and not decode:
+        eff_t = min(2.0 * cfg.window, t)
+        if attention == "flash":
+            eff_t = min(float(cfg.window), t)  # exact band, no 2-block slack
+    else:
+        eff_t = (t + 1) / 2 if (attention == "flash" and not decode) else t
+    return 2 * b * s * eff_t * (dqk + dv)  # QK^T + AV
+
+
+def cell_flops_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                     dpsgd_degree: int = 0,
+                     attention: str = "chunked") -> dict:
+    """Analytic global per-step {flops, hbm_bytes, collective note inputs}."""
+    kinds = [cfg.pattern[i % len(cfg.pattern)] for i in range(cfg.n_layers)]
+    b = float(shape.global_batch)
+    decode = shape.kind == "decode"
+    s = 1.0 if decode else float(shape.seq_len)
+    t = float(shape.seq_len)
+    if cfg.is_encdec:
+        s = s if decode else t / 2
+        t = t / 2
+
+    n_params = param_count(cfg)
+    n_active = active_param_count(cfg)
+    dtype_bytes = 2 if cfg.dtype == "bfloat16" else 4
+    p_bytes = 2 if cfg.param_dtype == "bfloat16" else 4
+
+    # matmul flops from active params: 2*N per token fwd (+4*N bwd for train)
+    fwd_mult = 2.0
+    train_mult = 6.0 if shape.kind == "train" else fwd_mult
+    flops = train_mult * n_active * b * s
+
+    # attention/recurrence execution term
+    mixer = 0.0
+    for kind in kinds:
+        f = _mixer_exec_flops(cfg, kind, b, s, t, decode, attention)
+        mixer += f * (3.0 if shape.kind == "train" else 1.0)
+    if cfg.is_encdec and shape.kind != "decode":
+        pass  # enc+dec both already counted via kinds loop at s, t halves
+    flops += mixer
+
+    # HBM bytes: params read once per step (+grads written for train),
+    # activations streamed ~2x per layer, KV/state cache read for decode.
+    act_bytes = 2.0 * cfg.n_layers * b * s * cfg.d_model * dtype_bytes
+    bytes_ = n_params * p_bytes + act_bytes
+    if shape.kind == "train":
+        bytes_ += 2.0 * n_params * p_bytes          # grads + update write
+        bytes_ += (dpsgd_degree + 1) * n_params * p_bytes  # gossip read/write
+    if decode:
+        kv_per_tok = 0.0
+        for kind in kinds:
+            if kind in ("global",):
+                if cfg.mla is not None:
+                    kv_per_tok += (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim)
+                else:
+                    kv_per_tok += 2 * cfg.kv_dim
+            elif kind == "local" and cfg.window:
+                kv_per_tok += 2 * cfg.kv_dim * min(1.0, cfg.window / t)
+        bytes_ += b * t * kv_per_tok * dtype_bytes  # cache sweep per new token
+        if cfg.rwkv is not None:
+            bytes_ += b * cfg.n_layers * cfg.d_model * cfg.rwkv.head_size * 4
+    if shape.kind == "prefill":
+        kv_write = sum(2 * cfg.kv_dim if k == "global" else
+                       (2 * cfg.kv_dim if k == "local" else 0) for k in kinds)
+        bytes_ += b * s * kv_write * dtype_bytes
+
+    return {"flops": flops, "hbm_bytes": bytes_, "params": n_params,
+            "active_params": n_active, "model_flops": model_flops(cfg, shape)}

@@ -1,0 +1,62 @@
+"""Pod-mode: collective traffic of D-PSGD gossip vs fully-synchronized
+all-reduce (the paper's §II tradeoff on datacenter links).
+
+Reads the production dry-run artifacts (512/256-chip HLO) when present and
+complements them with the LinkModel arithmetic for every candidate topology:
+per-step parameter-exchange bytes, modeled time on uniform ICI and on a
+DCI-penalized multi-pod fabric, and the achieved lambda (accuracy proxy via
+Eq. 7 network term).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bound import BoundParams, network_term
+from repro.core.comm_model import LinkModel
+from repro.core.density_controller import candidate_plans, evaluate_plan
+
+from .roofline import load_cells
+
+__all__ = ["main"]
+
+
+def main() -> list[dict]:
+    rows = []
+    pbytes = 24e9 / 16  # ~12B params bf16 / TP16 per-rank shard (gemma3-class)
+    for label, axes, shape, link in (
+            ("single-pod-16", ("data",), (16,), LinkModel()),
+            ("multi-pod-2x16", ("pod", "data"), (2, 16), LinkModel(dci_penalty=4.0)),
+    ):
+        n = int(np.prod(shape))
+        p = BoundParams(n=n)
+        for plan in candidate_plans(axes, shape):
+            lam, t = evaluate_plan(plan, pbytes, link)
+            # traffic per rank per step
+            if plan.kind == "allreduce":
+                traffic = 2 * pbytes * (n - 1) / n
+            else:
+                traffic = pbytes * plan.degree
+            rows.append({"mesh": label, "plan": plan.name, "lam": lam,
+                         "t_com_s": t, "bytes_per_rank": traffic,
+                         "net_err_term": float(network_term(p, min(lam, 0.999)))})
+
+    print("name,us_per_call,derived")
+    print("gossip_vs_allreduce,0,\"model table below\"")
+    print("mesh,plan,lam,t_com_s,GB_per_rank,net_err_term")
+    for r in rows:
+        print(f"{r['mesh']},{r['plan']},{r['lam']:.4f},{r['t_com_s']:.4f},"
+              f"{r['bytes_per_rank'] / 1e9:.2f},{r['net_err_term']:.2e}")
+
+    # measured (dry-run HLO) comparison when artifacts exist
+    cells = load_cells()
+    base = cells.get(("gemma3-12b", "train_4k"))
+    if base and "collectives_split" in base:
+        c = base["collectives_split"]
+        print(f"# measured gemma3-12b train_4k ({base.get('plan', {}).get('name')}): "
+              f"toplevel={c['toplevel']['total_link_bytes'] / 1e9:.2f} GB/dev, "
+              f"in_loop={c['in_loop']['total_link_bytes'] / 1e9:.3f} GB/dev-iter")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Roofline table: 3 terms per (arch x shape) from the single-pod dry-run.
+
+  compute    = analytic exec FLOPs / (chips * 197 TF/s bf16)
+  memory     = analytic HBM bytes  / (chips * 819 GB/s)
+  collective = per-chip link bytes / 50 GB/s, where link bytes =
+               HLO top-level collectives + in-loop collectives scaled by the
+               known trip counts (pattern repeats x microbatch for train).
+
+Analytic flops/bytes (benchmarks/flops.py) are used because XLA cost_analysis
+counts while-loop bodies once (verified; see module docstring there). The
+HLO-reported numbers are printed alongside for transparency. MODEL_FLOPS /
+exec-FLOPs is the "useful compute" ratio (remat, causal-masking waste,
+padding all reduce it).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES, get_config
+
+from .flops import cell_flops_bytes
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e-class)
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+CHIPS = 256                  # single-pod mesh
+
+__all__ = ["roofline_row", "load_cells", "main", "PEAK_FLOPS", "HBM_BW",
+           "LINK_BW", "CHIPS"]
+
+
+def load_cells(out_dir: str = "results/dryrun", mesh: str = "single",
+               tag: str = "") -> dict:
+    cells = {}
+    for f in glob.glob(os.path.join(out_dir, mesh, "*.json")):
+        d = json.load(open(f))
+        if tag and not f.endswith(f"__{tag}.json"):
+            continue
+        if not tag and "__dpsgd__" in os.path.basename(f):
+            continue
+        key = (d["arch"], d["shape"])
+        base = os.path.basename(f)[:-5]
+        if base == f"{d['arch']}__{d['shape']}" or tag:
+            cells[key] = d
+    return cells
+
+
+def _trip_counts(cfg, shape, microbatch: int = 4) -> tuple[float, float]:
+    """(outer, inner) loop trip counts: train = (microbatch, repeats);
+    serve = (repeats, 1) — matching the compiled loop nesting."""
+    rep = cfg.pattern_repeats
+    if cfg.is_encdec:
+        rep = cfg.n_layers  # enc+dec scans over all layers
+    rep = max(rep, 1)
+    if shape.kind == "train" and microbatch > 1:
+        return float(microbatch), float(rep)
+    return float(rep), 1.0
+
+
+def roofline_row(cell: dict, microbatch: int = 4) -> dict:
+    cfg = get_config(cell["arch"])
+    shape = SHAPES[cell["shape"]]
+    degree = cell.get("plan", {}).get("degree", 0)
+    model = cell_flops_bytes(cfg, shape, dpsgd_degree=degree)
+
+    t_compute = model["flops"] / (CHIPS * PEAK_FLOPS)
+    t_memory = model["hbm_bytes"] / (CHIPS * HBM_BW)
+
+    split = cell.get("collectives_split")
+    if split and "loop_depth_1" in split:
+        outer, inner = _trip_counts(cfg, shape, microbatch)
+        link_bytes = (split["toplevel"]["total_link_bytes"]
+                      + split["loop_depth_1"]["total_link_bytes"] * outer
+                      + split["loop_depth_2"]["total_link_bytes"] * outer * inner)
+    elif split:
+        top = split["toplevel"]["total_link_bytes"]
+        loop = split["in_loop"]["total_link_bytes"]
+        outer, inner = _trip_counts(cfg, shape, microbatch)
+        link_bytes = top + loop * outer * inner
+    else:
+        link_bytes = cell.get("collectives", {}).get("total_link_bytes", 0.0)
+    t_coll = link_bytes / LINK_BW  # link bytes are already per-device
+
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    ideal = model["model_flops"] / (CHIPS * PEAK_FLOPS)
+    # exposed = no comm/compute overlap (upper-bound step time);
+    # overlapped = perfect overlap of collectives with compute (the
+    # latency-hiding-scheduler limit) — the two MFU columns bracket reality.
+    mfu_exposed = ideal / step_time if step_time > 0 else 0.0
+    mfu_overlap = ideal / max(t_compute, t_memory) if max(t_compute, t_memory) > 0 else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": model["model_flops"],
+        "exec_flops": model["flops"],
+        "useful_ratio": model["model_flops"] / model["flops"],
+        "roofline_frac_mfu": mfu_exposed,
+        "mfu_overlapped": mfu_overlap,
+        "hlo_flops_per_dev": cell.get("flops"),
+        "hlo_bytes_per_dev": cell.get("bytes_accessed"),
+        "plan": cell.get("plan", {}).get("name", "-"),
+        "status": cell["status"],
+    }
+
+
+def main(out_dir: str = "results/dryrun") -> list[dict]:
+    cells = load_cells(out_dir)
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            cell = cells.get((arch, shape))
+            if cell is None:
+                continue
+            if cell["status"] == "skipped":
+                rows.append({"arch": arch, "shape": shape, "status": "skipped"})
+                continue
+            rows.append(roofline_row(cell))
+    hdr = ("arch,shape,t_compute_s,t_memory_s,t_collective_s,dominant,"
+           "useful_ratio,mfu_exposed,mfu_overlapped,plan")
+    print(hdr)
+    for r in rows:
+        if r.get("status") == "skipped":
+            print(f"{r['arch']},{r['shape']},skipped,,,,,,,")
+            continue
+        print(f"{r['arch']},{r['shape']},{r['t_compute_s']:.4g},"
+              f"{r['t_memory_s']:.4g},{r['t_collective_s']:.4g},"
+              f"{r['dominant']},{r['useful_ratio']:.3f},"
+              f"{r['roofline_frac_mfu']:.3f},{r['mfu_overlapped']:.3f},"
+              f"{r['plan']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV
+# sections (plus per-benchmark detail rows).
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (fig2_bound, fig3_epoch, fig3_runtime, gossip_vs_allreduce,
+                   roofline, tbl_rate_solver)
+
+    benches = [
+        ("fig2_bound (Eq.7 curves, paper Fig.2)", fig2_bound.main),
+        ("fig3_epoch (epoch-accuracy vs lambda_target, Fig.3b)", fig3_epoch.main),
+        ("fig3_runtime (runtime-accuracy vs eps x lambda_target, Fig.3c-f)",
+         fig3_runtime.main),
+        ("tbl_rate_solver (Algorithm 2 exact vs scalable)", tbl_rate_solver.main),
+        ("gossip_vs_allreduce (pod-mode collective traffic)", gossip_vs_allreduce.main),
+        ("roofline (32-cell table from the dry-run)", roofline.main),
+    ]
+    failures = 0
+    for name, fn in benches:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"BENCH-ERROR {name}: {type(e).__name__}: {e}", flush=True)
+        print(f"# elapsed {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

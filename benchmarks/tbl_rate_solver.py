@@ -1,0 +1,49 @@
+"""Algorithm 2 solver benchmark: exactness, constraint satisfaction, and
+solve time of the brute-force reference vs the scalable solvers (greedy /
+k-nearest / common-rate), over placements and lambda targets."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import channel, rate_opt
+from repro.models import cnn
+
+__all__ = ["main"]
+
+
+def main() -> list[dict]:
+    rows = []
+    for seed in range(5):
+        pos = channel.random_placement(6, 200.0, seed=seed)
+        cap = channel.capacity_matrix(pos, channel.ChannelParams(path_loss_exp=5.0))
+        for lam_t in (0.1, 0.5, 0.8):
+            sols = {}
+            times = {}
+            for method in ("bruteforce", "greedy", "k_nearest", "common_rate"):
+                t0 = time.perf_counter()
+                sols[method] = rate_opt.solve(cap, cnn.MODEL_BITS, lam_t,
+                                              method=method)
+                times[method] = time.perf_counter() - t0
+            best = sols["bruteforce"].t_com_s
+            for m, s in sols.items():
+                rows.append({"seed": seed, "lambda_target": lam_t, "method": m,
+                             "t_com_s": s.t_com_s, "lam": s.lam,
+                             "feasible": s.feasible,
+                             "optimality": s.t_com_s / best if s.feasible else np.inf,
+                             "solve_ms": times[m] * 1e3})
+    print("name,us_per_call,derived")
+    by_m: dict = {}
+    for r in rows:
+        by_m.setdefault(r["method"], []).append(r)
+    for m, rs in by_m.items():
+        opt = [r["optimality"] for r in rs if np.isfinite(r["optimality"])]
+        ms = np.mean([r["solve_ms"] for r in rs])
+        print(f"rate_solver_{m},{ms * 1e3:.0f},"
+              f"\"mean_opt_gap={np.mean(opt):.3f}x, feas={sum(r['feasible'] for r in rs)}/{len(rs)}\"")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: network-density-controlled D-PSGD in ~60 lines.
+
+Trains a tiny LM with 4 decentralized nodes on CPU, letting the density
+controller pick the gossip topology for a lambda target (paper Eq. 8), then
+compares against the fully-synchronized baseline.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import RunConfig, get_config, reduce_for_smoke
+from repro.core.density_controller import choose_plan
+from repro.data.synthetic import token_stream
+from repro.models import build
+from repro.optim.schedule import constant_lr
+from repro.train.step import (init_train_state, make_train_step,
+                              reshape_batch_for_nodes)
+
+N_NODES = 4
+STEPS = 40
+
+
+def train(mode: str, lambda_target: float = 0.9) -> float:
+    cfg = reduce_for_smoke(get_config("stablelm-3b"))
+    api = build(cfg)
+    run = RunConfig(mode=mode, optimizer="adamw", eta=1e-3,
+                    lambda_target=lambda_target, remat="none")
+
+    plan = None
+    if mode == "dpsgd":
+        # Eq. 8: cheapest gossip schedule with lambda <= target
+        choice = choose_plan(("data",), (N_NODES,), lambda_target,
+                             bytes_per_rank=1e6)
+        plan = choice.plan
+        print(f"  density controller chose: {choice}")
+
+    step = jax.jit(make_train_step(api, run, plan, constant_lr(1e-3)),
+                   donate_argnums=(0,))
+    state = init_train_state(api, run, jax.random.key(0), n_nodes=N_NODES)
+    gen = token_stream(8, 64, cfg.vocab_size, seed=0)
+    loss = None
+    for k in range(STEPS):
+        batch = {"tokens": jnp.asarray(next(gen))}
+        if mode == "dpsgd":
+            batch = reshape_batch_for_nodes(batch, N_NODES)
+        state, metrics = step(state, batch)
+        loss = float(metrics["loss"])
+        if k % 10 == 0:
+            print(f"  step {k:3d}  loss {loss:.4f}")
+    return loss
+
+
+if __name__ == "__main__":
+    print("== D-PSGD (network-density-controlled gossip) ==")
+    l_dpsgd = train("dpsgd")
+    print("== fully-synchronized baseline (all-reduce) ==")
+    l_sync = train("allreduce")
+    print(f"final losses: dpsgd={l_dpsgd:.4f} allreduce={l_sync:.4f} "
+          f"(both must learn; dpsgd trades a little consensus error for "
+          f"cheaper communication)")

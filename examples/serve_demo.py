@@ -1,0 +1,15 @@
+"""Batched serving demo: prefill a prompt batch and greedy-decode, for one
+attention arch and one recurrent (attention-free) arch — the decode path the
+dry-run lowers at 32k/512k context.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+from repro.configs import get_config, reduce_for_smoke
+from repro.launch.serve import generate
+
+for arch in ("qwen2.5-14b", "rwkv6-7b"):
+    cfg = reduce_for_smoke(get_config(arch))
+    out = generate(cfg, batch=4, prompt_len=32, gen=16)
+    print(f"{arch:14s} prefill {out['prefill_s']:.2f}s, "
+          f"decode {out['decode_s']:.2f}s ({out['tok_per_s']:.0f} tok/s), "
+          f"sample tokens: {out['tokens'][0][:8].tolist()}")

@@ -1,0 +1,155 @@
+"""Checkpointing: atomic, digest-verified, async-capable npz shards.
+
+Layout:  <dir>/step_<N>/host<h>.npz  +  <dir>/step_<N>/MANIFEST.json
+Writes go to ``.tmp-`` paths first and are renamed only after fsync — a
+killed writer never corrupts the latest checkpoint (restart reads the newest
+*complete* manifest). ``CheckpointManager`` keeps the last ``keep`` steps and
+can overlap saves with training via a writer thread (async=True).
+
+Restore supports **elastic topology change**: a D-PSGD state saved with
+n_nodes=N can be restored onto M != N nodes (`reshape_nodes`): surviving
+node rows are kept, new rows are filled by the node-axis mean — the natural
+D-PSGD warm start after failure/scale events (runtime.fault re-solves W).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["save", "restore", "CheckpointManager", "reshape_nodes"]
+
+
+def _flatten(state: PyTree) -> tuple[list[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(state)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+def save(directory: str, step: int, state: PyTree, host: int = 0) -> str:
+    """Atomic save; returns the checkpoint path."""
+    leaves, _ = _flatten(state)
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(step_dir, exist_ok=True)
+    tmp = os.path.join(step_dir, f".tmp-host{host}.npz")
+    final = os.path.join(step_dir, f"host{host}.npz")
+    arrays = {f"leaf_{i}": l for i, l in enumerate(leaves)}
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
+
+    digest = hashlib.sha256()
+    for l in leaves:
+        digest.update(np.ascontiguousarray(l).tobytes()[:4096])
+    manifest = {"step": step, "n_leaves": len(leaves),
+                "digest": digest.hexdigest(),
+                "shapes": [list(l.shape) for l in leaves],
+                "dtypes": [str(l.dtype) for l in leaves]}
+    mtmp = os.path.join(step_dir, ".tmp-MANIFEST.json")
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(mtmp, os.path.join(step_dir, "MANIFEST.json"))
+    return step_dir
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(directory, name, "MANIFEST.json")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, like: PyTree, step: Optional[int] = None,
+            host: int = 0) -> tuple[PyTree, int]:
+    """Restore into the structure of ``like``; returns (state, step)."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no complete checkpoint under {directory}")
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(step_dir, f"host{host}.npz"))
+    leaves_like, treedef = jax.tree.flatten(like)
+    if manifest["n_leaves"] != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, expected {len(leaves_like)}")
+    leaves = [jnp.asarray(data[f"leaf_{i}"]) for i in range(len(leaves_like))]
+    digest = hashlib.sha256()
+    for l in leaves:
+        digest.update(np.ascontiguousarray(np.asarray(l)).tobytes()[:4096])
+    if digest.hexdigest() != manifest["digest"]:
+        raise ValueError(f"checkpoint digest mismatch at step {step}")
+    return jax.tree.unflatten(treedef, leaves), step
+
+
+def reshape_nodes(state: PyTree, survivors: list[int], n_new: int) -> PyTree:
+    """Elastic restore: keep surviving node rows, fill the rest with the
+    survivor mean (leading axis = node axis on every leaf of params/opt)."""
+    def fix(leaf):
+        if leaf.ndim == 0:
+            return leaf
+        kept = leaf[np.asarray(survivors)]
+        if n_new <= kept.shape[0]:
+            return kept[:n_new]
+        fill = kept.mean(axis=0, keepdims=True).astype(leaf.dtype)
+        extra = jnp.broadcast_to(fill, (n_new - kept.shape[0], *kept.shape[1:]))
+        return jnp.concatenate([kept, extra], axis=0)
+    return jax.tree.map(fix, state)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, state: PyTree, host: int = 0):
+        state = jax.tree.map(np.asarray, state)  # snapshot off-device
+        if self._thread is not None:
+            self._thread.join()
+
+        def _do():
+            save(self.directory, step, state, host)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_do, daemon=True)
+            self._thread.start()
+        else:
+            _do()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, like: PyTree, host: int = 0):
+        return restore(self.directory, like, host=host)
+
+    def _gc(self):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and os.path.exists(
+                os.path.join(self.directory, n, "MANIFEST.json")))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,12 @@
+"""Core of the paper's contribution: network-density-controlled D-PSGD.
+
+Wireless-faithful pieces: channel (Eq. 2), topology (Eq. 4), bound (Eq. 6/7),
+rate_opt (Eq. 8 / Algorithm 2), comm_model (Eq. 3), dpsgd (Algorithm 1/Eq. 5).
+Pod-mode adaptation: gossip (ppermute mixing), density_controller (Eq. 8 on
+mesh link models), compression (beyond-paper quantized gossip).
+"""
+from . import (bound, channel, comm_model, compression, density_controller,
+               dpsgd, gossip, rate_opt, topology)
+
+__all__ = ["bound", "channel", "comm_model", "compression", "density_controller",
+           "dpsgd", "gossip", "rate_opt", "topology"]

@@ -1,0 +1,131 @@
+"""Compressed gossip with error feedback (beyond-paper; CHOCO-SGD-flavored).
+
+The paper's t_com is linear in the message size M (Eq. 3). Compressing the
+gossip payload therefore multiplies directly into the collective roofline
+term. We provide:
+
+* ``bf16`` cast (2x vs fp32) — lossless enough to skip feedback,
+* ``int8``  per-block affine quantization (4x) with **error feedback**: the
+  quantization residual is accumulated locally and re-added before the next
+  quantization, so the compression error stays bounded instead of
+  accumulating (Koloskova et al. 2019 / ref [6] of the paper).
+
+Messages are exchanged with the same ppermute schedule as uncompressed
+gossip; only the payload dtype changes. ``mix_compressed`` mixes the *exact*
+own value with *dequantized* neighbor values, keeping W's row sums at 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .gossip import GossipPlan
+
+PyTree = Any
+
+__all__ = ["QuantConfig", "quantize_int8", "dequantize_int8",
+           "compressed_gossip_mix_array", "compressed_gossip_mix_buffers",
+           "compression_ratio"]
+
+_BLOCK = 2048  # quantization block (per-block scales bound the error)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    mode: str = "int8"          # "none" | "bf16" | "int8"
+    error_feedback: bool = True
+
+
+def _pad_to_block(x: jax.Array) -> tuple[jax.Array, int]:
+    n = x.shape[0]
+    pad = (-n) % _BLOCK
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x, n
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array, int]:
+    """1-D fp -> (int8 payload, per-block fp32 scales, original length)."""
+    xp, n = _pad_to_block(x.astype(jnp.float32))
+    blocks = xp.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale.reshape(-1), n
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, n: int,
+                    dtype=jnp.float32) -> jax.Array:
+    blocks = q.reshape(-1, _BLOCK).astype(jnp.float32) * scale.reshape(-1, 1)
+    return blocks.reshape(-1)[:n].astype(dtype)
+
+
+def compressed_gossip_mix_array(
+    x: jax.Array,
+    residual: jax.Array,
+    plan: GossipPlan,
+    cfg: QuantConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """One error-feedback compressed mixing step for a 1-D buffer.
+
+    message m_i = Q(x_i + e_i);  e_i' = (x_i + e_i) - m_i
+    x_i' = W_ii x_i + sum_j W_ij m_j   (self term exact; neighbors compressed)
+
+    Returns (mixed, new_residual). With mode="none" this is exact gossip and
+    the residual stays zero.
+    """
+    if plan.kind == "allreduce" or cfg.mode == "none":
+        from .gossip import gossip_mix_array
+        return gossip_mix_array(x, plan), residual
+
+    x32 = x.astype(jnp.float32)
+    carried = x32 + (residual if cfg.error_feedback else 0.0)
+
+    if cfg.mode == "bf16":
+        msg = carried.astype(jnp.bfloat16)
+        new_residual = carried - msg.astype(jnp.float32)
+        acc = plan.self_weight * x32
+        for r in plan.rounds:
+            recv = jax.lax.ppermute(msg, plan.axis_names, r.perm(plan.node_shape))
+            acc = acc + plan.neighbor_weight * recv.astype(jnp.float32)
+        return acc.astype(x.dtype), (new_residual if cfg.error_feedback else residual)
+
+    if cfg.mode == "int8":
+        q, scale, n = quantize_int8(carried)
+        deq_self = dequantize_int8(q, scale, n)
+        new_residual = carried - deq_self
+        acc = plan.self_weight * x32
+        for r in plan.rounds:
+            perm = r.perm(plan.node_shape)
+            q_r = jax.lax.ppermute(q, plan.axis_names, perm)
+            s_r = jax.lax.ppermute(scale, plan.axis_names, perm)
+            acc = acc + plan.neighbor_weight * dequantize_int8(q_r, s_r, n)
+        return acc.astype(x.dtype), (new_residual if cfg.error_feedback else residual)
+
+    raise ValueError(f"unknown compression mode {cfg.mode!r}")
+
+
+def compressed_gossip_mix_buffers(
+    buffers: dict[str, jax.Array],
+    residuals: dict[str, jax.Array],
+    plan: GossipPlan,
+    cfg: QuantConfig,
+) -> tuple[dict[str, jax.Array], dict[str, jax.Array]]:
+    out, res = {}, {}
+    for k, v in buffers.items():
+        out[k], res[k] = compressed_gossip_mix_array(v, residuals[k], plan, cfg)
+    return out, res
+
+
+def compression_ratio(cfg: QuantConfig, base_dtype_bytes: int = 4) -> float:
+    """Payload-bytes multiplier vs the uncompressed buffer (scales included)."""
+    if cfg.mode == "none":
+        return 1.0
+    if cfg.mode == "bf16":
+        return 2.0 / base_dtype_bytes
+    if cfg.mode == "int8":
+        return (1.0 + 4.0 / _BLOCK) / base_dtype_bytes
+    raise ValueError(cfg.mode)

@@ -1,0 +1,208 @@
+"""Transmission-rate optimization (paper Eq. 8 + Algorithm 2).
+
+    min_R t_com   s.t.  lambda(W(R)) <= lambda_target
+
+Candidate structure: raising R_i only ever *removes* receivers, so the only
+rates worth considering for node i are the entries of row i of the capacity
+matrix (choose R_i = C_ij  <=> "reach exactly the nodes at capacity >= C_ij").
+That makes the exact search an (n-1)^n .. n^n combinatorial problem — the
+paper solves it by brute force (n=6). We keep the brute force as the exact
+reference and add scalable solvers that the property tests pin against it:
+
+* ``solve_common_rate``  — all nodes share one rate; O(n^2) candidates.
+* ``solve_k_nearest``    — node i reaches its k nearest capacity-neighbors;
+                           sweep k (n candidates).
+* ``solve_greedy``       — start from the densest feasible solution and raise
+                           individual rates while the constraint holds.
+
+Every solver is deterministic given (C, lambda_target), so — as in the paper —
+all nodes run it independently and arrive at the same R (no extra exchange).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Literal, Optional
+
+import numpy as np
+
+from .comm_model import tdm_time_s
+from .topology import adjacency_from_rates, paper_w, spectral_lambda
+
+__all__ = ["RateSolution", "solve_bruteforce", "solve_common_rate", "solve_k_nearest",
+           "solve_greedy", "solve", "candidate_rates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RateSolution:
+    rates_bps: np.ndarray       # (n,) chosen R
+    t_com_s: float              # Eq. 3 time for one model share of `model_bits`
+    lam: float                  # achieved lambda
+    w: np.ndarray               # induced averaging matrix
+    feasible: bool
+
+    def __repr__(self) -> str:  # keep test logs readable
+        return (f"RateSolution(t_com={self.t_com_s:.4g}s, lam={self.lam:.4f}, "
+                f"feasible={self.feasible}, rates={np.array2string(self.rates_bps, precision=3)})")
+
+
+def candidate_rates(capacity: np.ndarray, i: int) -> np.ndarray:
+    """Distinct finite capacities of row i, descending (fastest first)."""
+    row = capacity[i]
+    vals = np.unique(row[np.isfinite(row)])
+    return vals[::-1]
+
+
+def _evaluate(
+    capacity: np.ndarray,
+    rates: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    reception_based: bool,
+) -> RateSolution:
+    a = adjacency_from_rates(capacity, rates, reception_based=reception_based)
+    w = paper_w(a)
+    lam = spectral_lambda(w)
+    t = tdm_time_s(model_bits, rates)
+    return RateSolution(rates, t, lam, w, lam <= lambda_target + 1e-12)
+
+
+def solve_bruteforce(
+    capacity: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    reception_based: bool = False,
+    max_nodes: int = 8,
+) -> RateSolution:
+    """Algorithm 2 verbatim: exhaustive search over per-row capacity picks.
+
+    Complexity ~ prod_i |row_i| * O(n^3); practical for n <= ``max_nodes``.
+    """
+    n = capacity.shape[0]
+    if n > max_nodes:
+        raise ValueError(f"brute force capped at n={max_nodes}; use solve() for n={n}")
+    per_node = [candidate_rates(capacity, i) for i in range(n)]
+    best: Optional[RateSolution] = None
+    for combo in itertools.product(*per_node):
+        sol = _evaluate(capacity, np.asarray(combo), model_bits, lambda_target, reception_based)
+        if not sol.feasible:
+            continue
+        if best is None or sol.t_com_s < best.t_com_s:
+            best = sol
+    if best is None:  # even the densest topology misses the target
+        rates = np.array([per_node[i][-1] for i in range(n)])
+        return _evaluate(capacity, rates, model_bits, lambda_target, reception_based)
+    return best
+
+
+def solve_common_rate(
+    capacity: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    reception_based: bool = False,
+) -> RateSolution:
+    """All nodes share a single rate: scan distinct capacities descending and
+    return the fastest feasible one. O(n^2) candidates x O(n^3) eig."""
+    vals = np.unique(capacity[np.isfinite(capacity)])[::-1]
+    n = capacity.shape[0]
+    best: Optional[RateSolution] = None
+    for r in vals:
+        sol = _evaluate(capacity, np.full(n, r), model_bits, lambda_target, reception_based)
+        if sol.feasible:
+            return sol  # descending scan: the first feasible rate is the fastest
+        best = sol
+    return best  # densest (slowest) attempt, infeasible
+
+
+def solve_k_nearest(
+    capacity: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    reception_based: bool = False,
+) -> RateSolution:
+    """R_i = capacity to node i's k-th best neighbor; sweep k = 1..n-1
+    ascending and return the first feasible (sparsest-but-feasible would be
+    k minimal; since t_com decreases with fewer/slower... note per-node rates
+    *rise* as k shrinks, so small k = fast). Returns the best feasible over
+    the sweep."""
+    n = capacity.shape[0]
+    best: Optional[RateSolution] = None
+    worst: Optional[RateSolution] = None
+    for k in range(1, n):
+        rates = np.empty(n)
+        for i in range(n):
+            row = np.sort(capacity[i][np.isfinite(capacity[i])])[::-1]
+            rates[i] = row[min(k - 1, row.size - 1)]
+        sol = _evaluate(capacity, rates, model_bits, lambda_target, reception_based)
+        worst = sol
+        if sol.feasible and (best is None or sol.t_com_s < best.t_com_s):
+            best = sol
+    return best if best is not None else worst
+
+
+def solve_greedy(
+    capacity: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    reception_based: bool = False,
+    max_iters: int = 10_000,
+) -> RateSolution:
+    """Start dense (every node at its minimum row capacity => maximal
+    connectivity) and greedily raise one node's rate to its next candidate,
+    picking the raise with the best t_com improvement that stays feasible.
+    Terminates when no single raise is feasible."""
+    n = capacity.shape[0]
+    per_node = [candidate_rates(capacity, i) for i in range(n)]  # descending
+    idx = np.array([len(per_node[i]) - 1 for i in range(n)])     # start = slowest/densest
+    rates = np.array([per_node[i][idx[i]] for i in range(n)])
+    cur = _evaluate(capacity, rates, model_bits, lambda_target, reception_based)
+    if not cur.feasible:
+        return cur
+    for _ in range(max_iters):
+        best_next: Optional[tuple[int, RateSolution]] = None
+        for i in range(n):
+            if idx[i] == 0:
+                continue
+            trial = rates.copy()
+            trial[i] = per_node[i][idx[i] - 1]
+            sol = _evaluate(capacity, trial, model_bits, lambda_target, reception_based)
+            if sol.feasible and sol.t_com_s < cur.t_com_s - 1e-15:
+                if best_next is None or sol.t_com_s < best_next[1].t_com_s:
+                    best_next = (i, sol)
+        if best_next is None:
+            break
+        i, cur = best_next
+        idx[i] -= 1
+        rates = cur.rates_bps
+    return cur
+
+
+_SOLVERS: dict[str, Callable[..., RateSolution]] = {
+    "bruteforce": solve_bruteforce,
+    "common_rate": solve_common_rate,
+    "k_nearest": solve_k_nearest,
+    "greedy": solve_greedy,
+}
+
+
+def solve(
+    capacity: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    method: Literal["auto", "bruteforce", "common_rate", "k_nearest", "greedy"] = "auto",
+    reception_based: bool = False,
+) -> RateSolution:
+    """Front door. ``auto`` = brute force up to n=7 (exact, like the paper),
+    else best-of(greedy, k_nearest, common_rate)."""
+    n = capacity.shape[0]
+    if method == "auto":
+        if n <= 7:
+            return solve_bruteforce(capacity, model_bits, lambda_target,
+                                    reception_based=reception_based)
+        sols = [f(capacity, model_bits, lambda_target, reception_based=reception_based)
+                for f in (solve_greedy, solve_k_nearest, solve_common_rate)]
+        feasible = [s for s in sols if s.feasible]
+        pool = feasible if feasible else sols
+        return min(pool, key=lambda s: s.t_com_s)
+    return _SOLVERS[method](capacity, model_bits, lambda_target,
+                            reception_based=reception_based)

@@ -1,0 +1,198 @@
+"""Averaging/mixing matrices and spectral density measure (paper §II-C, Eq. 4).
+
+The paper characterises network density through
+``lambda = max{|lambda_2(W)|, |lambda_n(W)|}`` of the averaging matrix W.
+Smaller lambda = denser/faster-mixing topology; lambda -> 0 as W -> 11^T/n.
+
+Two W families live here:
+
+* ``paper_w`` — Eq. 4 verbatim: A_ij = 1 if C_ij >= R_i, W = row-normalised A
+  (row-stochastic, generally asymmetric).
+* ``metropolis_w`` — symmetric doubly-stochastic Metropolis-Hastings weights on
+  an undirected graph; used by the pod-mode gossip (preserves the global
+  parameter mean — see DESIGN.md §2 deviations).
+
+Plus the regular graph families the datacenter density controller searches
+over (ring-k, torus, hypercube, complete) with closed-form neighbor shifts
+that map 1:1 onto ``jax.lax.ppermute`` rounds.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "adjacency_from_rates",
+    "paper_w",
+    "metropolis_w",
+    "fully_connected_w",
+    "spectral_lambda",
+    "is_connected",
+    "ring_adjacency",
+    "torus_adjacency",
+    "hypercube_adjacency",
+    "complete_adjacency",
+    "neighbor_shifts_ring",
+]
+
+
+# ---------------------------------------------------------------------------
+# Averaging matrices
+# ---------------------------------------------------------------------------
+
+def adjacency_from_rates(
+    capacity: np.ndarray,
+    rates: np.ndarray,
+    reception_based: bool = False,
+) -> np.ndarray:
+    """Eq. 4 connectivity: A_ij = 1 if C_ij >= R_i (paper verbatim).
+
+    With ``reception_based=True`` the physically-receivable variant is used
+    instead: node i averages the nodes whose *transmissions reach i*, i.e.
+    A_ij = 1 if C_ij >= R_j (see DESIGN.md §2). The two coincide for a common
+    rate because C is symmetric. Diagonal is always 1 (C_ii = +inf).
+    """
+    capacity = np.asarray(capacity, dtype=np.float64)
+    rates = np.asarray(rates, dtype=np.float64)
+    if reception_based:
+        a = (capacity >= rates[None, :]).astype(np.float64)
+    else:
+        a = (capacity >= rates[:, None]).astype(np.float64)
+    np.fill_diagonal(a, 1.0)
+    return a
+
+
+def paper_w(adjacency: np.ndarray) -> np.ndarray:
+    """Row-stochastic W_ij = A_ij / sum_j A_ij (Eq. 4). Satisfies W 1 = 1."""
+    a = np.asarray(adjacency, dtype=np.float64)
+    return a / a.sum(axis=1, keepdims=True)
+
+
+def metropolis_w(adjacency: np.ndarray) -> np.ndarray:
+    """Metropolis-Hastings weights on an undirected graph.
+
+    W_ij = 1/(1 + max(deg_i, deg_j)) for edges, W_ii = 1 - sum_{j!=i} W_ij.
+    Symmetric & doubly stochastic => preserves the parameter mean and has real
+    eigenvalues, so the paper's lambda = max{|l2|, |ln|} applies exactly.
+    """
+    a = np.asarray(adjacency, dtype=np.float64).copy()
+    np.fill_diagonal(a, 0.0)
+    if not np.allclose(a, a.T):
+        raise ValueError("metropolis_w requires an undirected (symmetric) adjacency")
+    deg = a.sum(axis=1)
+    n = a.shape[0]
+    w = np.zeros_like(a)
+    ij = np.nonzero(a)
+    w[ij] = 1.0 / (1.0 + np.maximum(deg[ij[0]], deg[ij[1]]))
+    w[np.arange(n), np.arange(n)] = 1.0 - w.sum(axis=1)
+    return w
+
+
+def fully_connected_w(n: int) -> np.ndarray:
+    """Fully-synchronized SGD averaging: W = 11^T / n (lambda = 0)."""
+    return np.full((n, n), 1.0 / n)
+
+
+# ---------------------------------------------------------------------------
+# Spectral density measure
+# ---------------------------------------------------------------------------
+
+def spectral_lambda(w: np.ndarray) -> float:
+    """lambda = max{|lambda_2(W)|, |lambda_n(W)|} (paper §III-A).
+
+    For symmetric W this is exactly the paper's definition (real spectrum).
+    For the paper's asymmetric row-stochastic W we take the second-largest
+    eigenvalue *modulus* (the natural generalization; the Perron eigenvalue 1
+    is removed once). A disconnected graph has a repeated eigenvalue 1 and
+    thus lambda = 1.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    if np.allclose(w, w.T):
+        eig = np.linalg.eigvalsh(w)
+        # eigvalsh sorts ascending; drop one eigenvalue closest to 1.
+        mags = np.abs(eig)
+        drop = int(np.argmin(np.abs(eig - 1.0)))
+        mags = np.delete(mags, drop)
+        return float(mags.max()) if mags.size else 0.0
+    eig = np.linalg.eigvals(w)
+    mags = np.abs(eig)
+    drop = int(np.argmin(np.abs(eig - 1.0)))
+    mags = np.delete(mags, drop)
+    return float(mags.max()) if mags.size else 0.0
+
+
+def is_connected(adjacency: np.ndarray) -> bool:
+    """Undirected-reachability check via BFS on A | A^T (self-loops ignored)."""
+    a = np.asarray(adjacency) > 0
+    a = a | a.T
+    n = a.shape[0]
+    seen = np.zeros(n, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        i = stack.pop()
+        for j in np.nonzero(a[i])[0]:
+            if not seen[j]:
+                seen[j] = True
+                stack.append(int(j))
+    return bool(seen.all())
+
+
+# ---------------------------------------------------------------------------
+# Regular graph families (pod-mode candidate topologies)
+# ---------------------------------------------------------------------------
+
+def ring_adjacency(n: int, k: int = 1) -> np.ndarray:
+    """Ring with connections to the k nearest neighbors on each side
+    (degree 2k). k = n//2 odd-cases degrade to complete."""
+    a = np.zeros((n, n))
+    for s in range(1, k + 1):
+        idx = np.arange(n)
+        a[idx, (idx + s) % n] = 1.0
+        a[idx, (idx - s) % n] = 1.0
+    np.fill_diagonal(a, 0.0)
+    return a
+
+
+def torus_adjacency(rows: int, cols: int) -> np.ndarray:
+    """2D torus (degree 4; degree 2 along degenerate axes of size 2)."""
+    n = rows * cols
+    a = np.zeros((n, n))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for rr, cc in ((r + 1, c), (r - 1, c), (r, c + 1), (r, c - 1)):
+                j = (rr % rows) * cols + (cc % cols)
+                if j != i:
+                    a[i, j] = 1.0
+    return a
+
+
+def hypercube_adjacency(n: int) -> np.ndarray:
+    """Hypercube on n = 2^m nodes (degree log2 n)."""
+    m = int(np.log2(n))
+    if 2**m != n:
+        raise ValueError(f"hypercube needs a power-of-two node count, got {n}")
+    a = np.zeros((n, n))
+    for i in range(n):
+        for b in range(m):
+            a[i, i ^ (1 << b)] = 1.0
+    return a
+
+
+def complete_adjacency(n: int) -> np.ndarray:
+    a = np.ones((n, n))
+    np.fill_diagonal(a, 0.0)
+    return a
+
+
+def neighbor_shifts_ring(n: int, k: int) -> Sequence[int]:
+    """Ring-k neighbor set as signed circular shifts — each maps onto one
+    ``jax.lax.ppermute`` round: [+1, -1, +2, -2, ..., +k, -k]."""
+    out: list[int] = []
+    for s in range(1, k + 1):
+        out.append(s)
+        if (n - s) != s:  # avoid duplicating the antipode on even rings
+            out.append(-s)
+    return out

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot spots (DESIGN.md §5).
+
+``ops`` = jit'd public wrappers, ``ref`` = pure-jnp oracles, one module per
+kernel with explicit BlockSpec VMEM tiling. Validated in interpret mode on
+CPU; TPU is the deployment target (interpret=False).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

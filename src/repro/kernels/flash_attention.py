@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window, GQA).
+
+Grid = (B*Hq, n_q_blocks, n_k_blocks); the innermost (k-block) dimension is
+sequential on TPU, so fp32 running (acc, m, l) live in VMEM scratch across it
+(the standard TPU flash pattern). Blocks outside the causal / window band are
+skipped with ``pl.when`` — unlike the XLA chunked-scan path, the kernel does
+NOT spend FLOPs on fully-masked blocks (this is the kernel's reason to exist:
+~2x fewer attention FLOPs at equal output, see EXPERIMENTS.md §Perf).
+
+GQA without materialization: the K/V BlockSpec index_map divides the q-head
+grid coordinate by the group size, so kv heads are read in place.
+
+Block sizes default to (128, 128) — MXU-aligned on the contraction and lane
+dimensions for head_dim >= 128; head_dim is padded to a multiple of 128 by
+the wrapper in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            nk: int, seq_q: int, seq_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # causal band: this k block is live iff k_start <= q_end; window band:
+    # k_end > q_start - window.
+    live = True
+    if causal:
+        live = k_start <= q_start + bq - 1
+    if window:
+        live = jnp.logical_and(live, k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < seq_k
+        mask &= qpos < seq_q
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, ...] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)[:, None]
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "group", "seq_q", "seq_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, group: int = 1,
+                    bq: int = 128, bk: int = 128,
+                    seq_q: int | None = None, seq_k: int | None = None,
+                    interpret: bool = True) -> jax.Array:
+    """q (BHq, Sq, D), k/v (BHkv, Sk, D) with BHq = BHkv * group.
+
+    Shapes must be pre-padded so Sq % bq == Sk % bk == 0 and D % 128 == 0
+    (ops.flash_attention_gqa does this); ``seq_q``/``seq_k`` are the TRUE
+    lengths — padded rows beyond them are masked in-kernel."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    nq, nk = sq // bq, sk // bk
+    grid = (bh, nq, nk)
+    kernel = functools.partial(
+        _kernel, scale=d**-0.5, causal=causal, window=window, bq=bq, bk=bk,
+        nk=nk, seq_q=seq_q if seq_q is not None else sq,
+        seq_k=seq_k if seq_k is not None else sk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, iq, ik, g=group: (b // g, ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, iq, ik, g=group: (b // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),   # acc
+            pltpu.VMEM((bq,), jnp.float32),     # running max
+            pltpu.VMEM((bq,), jnp.float32),     # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)

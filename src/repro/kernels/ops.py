@@ -1,0 +1,119 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each wrapper normalizes layouts (padding to tile multiples, GQA head
+bookkeeping) and exposes the same signature as its ``ref.py`` oracle, so
+tests can swap implementations 1:1. ``interpret=True`` (the default here)
+executes the kernel bodies in Python on CPU — the TPU path is the same call
+with interpret=False.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import gossip_mix as _gm
+from . import quantize as _qz
+from . import rglru_scan as _rg
+from . import rwkv6_scan as _rw
+
+__all__ = ["gossip_mix", "flash_attention_gqa", "rwkv6", "rglru",
+           "quantize_int8", "dequantize_int8"]
+
+
+def gossip_mix(bufs: jax.Array, weights: jax.Array,
+               interpret: bool = True) -> jax.Array:
+    """bufs (K, N) stacked self+neighbor payloads, weights (K,) -> (N,)."""
+    return _gm.gossip_mix(bufs, weights, interpret=interpret)
+
+
+def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        bq: int = 128, bk: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """q (B,S,Hq,D), k/v (B,T,Hkv,D) -> (B,S,Hq,D). Pads S/T to block
+    multiples and D to 128 lanes, then calls the Pallas kernel."""
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bq = min(bq, max(8, s))
+    bk = min(bk, max(8, t))
+    pad_q = (-s) % bq
+    pad_k = (-t) % bk
+    pad_d = (-d) % 128
+
+    def prep(x, pad_seq):
+        x = jnp.pad(x, ((0, 0), (0, pad_seq), (0, 0), (0, pad_d)))
+        x = jnp.moveaxis(x, 2, 1)  # (B, H, S, D)
+        return x.reshape(x.shape[0] * x.shape[1], x.shape[2], x.shape[3])
+
+    qf = prep(q, pad_q)
+    kf = prep(k, pad_k)
+    vf = prep(v, pad_k)
+    # scale must use the true head dim, not the padded one
+    qf = qf * (d**-0.5 / (qf.shape[-1] ** -0.5))
+    out = _fa.flash_attention(qf, kf, vf, causal=causal, window=window,
+                              group=g, bq=bq, bk=bk, seq_q=s, seq_k=t,
+                              interpret=interpret)
+    out = out.reshape(b, hq, s + pad_q, d + pad_d)[:, :, :s, :d]
+    return jnp.moveaxis(out, 1, 2)
+
+
+def rwkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+          u: jax.Array, chunk: int = 64,
+          interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """r,k,v,w (B,S,H,D); u (H,D) -> (y (B,S,H,D), state (B,H,D,D))."""
+    b, s, h, d = r.shape
+    chunk = min(chunk, max(8, s))
+    pad = (-s) % chunk
+
+    def prep(x, cval=0.0):
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=cval)
+        x = jnp.moveaxis(x, 2, 1)
+        return x.reshape(b * h, s + pad, d).astype(jnp.float32)
+
+    rf, kf, vf = prep(r), prep(k), prep(v)
+    wf = prep(w, cval=1.0)  # pad with decay 1, k=0 => state untouched
+    uf = jnp.broadcast_to(u.astype(jnp.float32)[None, :, None, :],
+                          (b, h, 1, d)).reshape(b * h, 1, d)
+    y, s_fin = _rw.rwkv6_scan(rf, kf, vf, wf, uf, chunk=chunk,
+                              interpret=interpret)
+    y = y.reshape(b, h, s + pad, d)[:, :, :s]
+    return jnp.moveaxis(y, 1, 2).astype(r.dtype), s_fin.reshape(b, h, d, d)
+
+
+def rglru(a: jax.Array, binp: jax.Array, h0: jax.Array | None = None,
+          chunk: int = 256, interpret: bool = True) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t; a, b (B,S,D); h0 (B,D) -> h (B,S,D)."""
+    b, s, d = a.shape
+    chunk = min(chunk, max(8, s))
+    bd = 128 if d % 128 == 0 else d
+    pad = (-s) % chunk
+    if h0 is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+    af = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    bf = jnp.pad(binp, ((0, 0), (0, pad), (0, 0)))
+    out = _rg.rglru_scan(af.astype(jnp.float32), bf.astype(jnp.float32),
+                         h0.astype(jnp.float32), chunk=chunk, bd=bd,
+                         interpret=interpret)
+    return out[:, :s].astype(a.dtype)
+
+
+def quantize_int8(x: jax.Array, interpret: bool = True):
+    """x (R, C) -> (q int8, scales f32 (R, ceil(C/256))); pads R to 8, C to 256."""
+    r, c = x.shape
+    pr, pc = (-r) % 8, (-c) % 256
+    xp = jnp.pad(x, ((0, pr), (0, pc)))
+    q, s = _qz.quantize_int8(xp, interpret=interpret)
+    return q[:r, :c], s[:r]
+
+
+def dequantize_int8(q: jax.Array, s: jax.Array, dtype=jnp.float32,
+                    interpret: bool = True) -> jax.Array:
+    r, c = q.shape
+    pr, pc = (-r) % 8, (-c) % 256
+    qp = jnp.pad(q, ((0, pr), (0, pc)))
+    sp = jnp.pad(s, ((0, pr), (0, 0)))
+    out = _qz.dequantize_int8(qp, sp, dtype=dtype, interpret=interpret)
+    return out[:r, :c]

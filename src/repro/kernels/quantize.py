@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: block-scaled int8 pack for compressed gossip payloads.
+
+One pass per (row-block x col-block) tile: reduce |x| over each scale block
+(256 lanes), derive the per-block scale, round to int8. Used by the
+compressed gossip path (core.compression / train.step) as the TPU lowering of
+``_quantize_rowwise_int8`` — blocked scales rather than whole-row scales, so
+each tile is self-contained in VMEM (no cross-tile reduction).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["quantize_int8", "dequantize_int8"]
+
+_BLOCK = 256     # lanes per scale block (multiple of 128)
+_ROWS = 8        # rows per tile
+
+
+def _q_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)               # (rows, cols)
+    rows, cols = x.shape
+    xb = x.reshape(rows, cols // _BLOCK, _BLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127)
+    q_ref[...] = q.reshape(rows, cols).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dq_kernel(q_ref, s_ref, o_ref):
+    rows, cols = q_ref.shape
+    qb = q_ref[...].astype(jnp.float32).reshape(rows, cols // _BLOCK, _BLOCK)
+    o_ref[...] = (qb * s_ref[...][..., None]).reshape(rows, cols).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_int8(x: jax.Array, interpret: bool = True
+                  ) -> tuple[jax.Array, jax.Array]:
+    """x (R, C), R % 8 == 0, C % 256 == 0 -> (int8 (R, C), f32 (R, C/256))."""
+    r, c = x.shape
+    bc = min(c, _BLOCK * 16)
+    grid = (r // _ROWS, c // bc)
+    q, s = pl.pallas_call(
+        _q_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((_ROWS, bc), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((_ROWS, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((_ROWS, bc // _BLOCK), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), jnp.int8),
+            jax.ShapeDtypeStruct((r, c // _BLOCK), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "interpret"))
+def dequantize_int8(q: jax.Array, s: jax.Array, dtype=jnp.float32,
+                    interpret: bool = True) -> jax.Array:
+    r, c = q.shape
+    bc = min(c, _BLOCK * 16)
+    grid = (r // _ROWS, c // bc)
+    return pl.pallas_call(
+        _dq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_ROWS, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((_ROWS, bc // _BLOCK), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((_ROWS, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), dtype),
+        interpret=interpret,
+    )(q, s)

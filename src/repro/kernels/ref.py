@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gossip_mix_ref", "flash_attention_ref", "rwkv6_ref", "rglru_ref",
+           "quantize_int8_ref", "dequantize_int8_ref"]
+
+
+def gossip_mix_ref(bufs: jax.Array, weights: jax.Array) -> jax.Array:
+    """bufs (K, N), weights (K,) -> (N,): out = sum_k w_k * bufs_k (fp32 acc)."""
+    return jnp.einsum("k,kn->n", weights.astype(jnp.float32),
+                      bufs.astype(jnp.float32)).astype(bufs.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q (B,S,Hq,D), k/v (B,T,Hkv,D) -> (B,S,Hq,D). Naive masked softmax."""
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bshgd,bthd->bshgt", qg,
+                        k.astype(jnp.float32)) * d**-0.5
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    scores = jnp.where(mask[None, :, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bshgt,bthd->bshgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, d).astype(q.dtype)
+
+
+def rwkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, s0: jax.Array | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """Exact sequential WKV. r,k,v,w (B,S,H,D) fp32; u (H,D).
+    Returns (y (B,S,H,D), s_final (B,H,D,D))."""
+    b, s, h, d = r.shape
+    state = jnp.zeros((b, h, d, d), jnp.float32) if s0 is None else s0
+
+    def body(state, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,D,E)
+        y = jnp.einsum("bhd,bhde->bhe", rt,
+                       state + u[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, w))
+    state, ys = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def rglru_ref(a: jax.Array, binp: jax.Array,
+              h0: jax.Array | None = None) -> jax.Array:
+    """Sequential h_t = a_t h_{t-1} + b_t. a, b (B,S,D)."""
+    h = jnp.zeros_like(a[:, 0]) if h0 is None else h0
+
+    def body(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(body, h, (jnp.moveaxis(a, 1, 0),
+                                   jnp.moveaxis(binp, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def quantize_int8_ref(x: jax.Array, block: int = 256
+                      ) -> tuple[jax.Array, jax.Array]:
+    """x (R, C) with C % block == 0 -> (q int8 (R, C), scales f32 (R, C/block))."""
+    r, c = x.shape
+    xb = x.astype(jnp.float32).reshape(r, c // block, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(r, c), scale
+
+
+def dequantize_int8_ref(q: jax.Array, scale: jax.Array, block: int = 256,
+                        dtype=jnp.float32) -> jax.Array:
+    r, c = q.shape
+    xb = q.reshape(r, c // block, block).astype(jnp.float32) * scale[..., None]
+    return xb.reshape(r, c).astype(dtype)

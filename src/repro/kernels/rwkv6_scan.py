@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: chunked RWKV-6 WKV recurrence.
+
+Per (batch*head) the recurrence S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T) is evaluated chunk-by-chunk:
+
+  grid = (B*H, n_chunks); the chunk dimension is sequential, so the (D, D)
+  fp32 state lives in VMEM scratch across chunks. Within a chunk everything
+  is dense (c x c and c x D matmuls) using cumulative log-decays; only
+  non-positive exponents are formed (no overflow), mirroring
+  models/rwkv6.wkv_chunked — whose jnp path is also the oracle's chunked
+  counterpart (ref.rwkv6_ref is the exact sequential recurrence).
+
+D = head_size (64 for rwkv6-7b): a (64, 64) fp32 state tile fits VMEM
+trivially; chunk = 64 keeps the intra-chunk (c, c, D) product under 2 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rwkv6_scan"]
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_out_ref, state_ref,
+            *, chunk: int, n_chunks: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)      # (c, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)    # log decay, (c, D), <= 0
+    u = u_ref[0].astype(jnp.float32)      # (1, D) bonus
+
+    lcum = jnp.cumsum(lw, axis=0)         # L_t inclusive
+    lprev = lcum - lw                     # L_{t-1}
+    state = state_ref[...]
+
+    # inter-chunk: y_t += (r_t * exp(L_{t-1}))^T S_0
+    rdec = r * jnp.exp(lprev)
+    y = jax.lax.dot_general(rdec, state, (((1,), (0,)), ((), ())))
+    # intra-chunk pairwise with per-channel decay (exponents <= 0)
+    diff = lprev[:, None, :] - lcum[None, :, :]          # (t, i, D)
+    att = jnp.einsum("td,id,tid->ti", r, k,
+                     jnp.exp(jnp.minimum(diff, 0.0)))
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(tri, att, 0.0)
+    y = y + jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())))
+    # bonus
+    y = y + jnp.sum(r * u * k, axis=1, keepdims=True) * v
+    y_ref[0, ...] = y.astype(y_ref.dtype)
+
+    # state update: S_c = diag(exp(L_c)) S_0 + sum_i diag(exp(L_c - L_i)) k_i v_i^T
+    lc = lcum[-1:, :]                                    # (1, D)
+    kdec = k * jnp.exp(jnp.minimum(lc - lcum, 0.0))
+    state_ref[...] = jnp.exp(lc[0])[:, None] * state + jax.lax.dot_general(
+        kdec, v, (((0,), (0,)), ((), ())))
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        s_out_ref[0, ...] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, chunk: int = 64,
+               interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """r,k,v,w: (BH, S, D) fp32 (w in (0,1)); u: (BH, 1, D).
+    Returns (y (BH, S, D), final state (BH, D, D)). S % chunk == 0 required
+    (ops wrapper pads with w=1, k=0)."""
+    bh, s, d = r.shape
+    n_chunks = s // chunk
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-12))
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=(bh, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, d), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, d, d), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), r.dtype),
+            jax.ShapeDtypeStruct((bh, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u)
+    return y, s_final

@@ -1,0 +1,345 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective analysis.
+
+The two lines above MUST stay first: jax locks the device count at first
+backend init, and the dry-run (only) needs 512 placeholder host devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out results/dryrun]
+  python -m repro.launch.dryrun --list
+
+Each cell writes ``<out>/<mesh>/<arch>__<shape>.json`` (resumable: existing
+files are skipped unless --force). Training cells lower the Mode B D-PSGD
+``train_step`` (the paper's technique: gossip collective-permutes instead of
+gradient all-reduce); an ``--mode allreduce`` baseline is available for the
+fully-synchronized comparison. Serve cells lower prefill/decode steps.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, RunConfig, cell_is_runnable, get_config
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.density_controller import choose_plan
+from ..models import build, encdec as encdec_mod, transformer
+from ..optim.schedule import constant_lr
+from ..train import shardings as shr
+from ..train.step import init_train_state, make_train_step
+from ..utils.hlo import collective_summary, collective_summary_split
+from .mesh import make_production_mesh, replica_axes, tp_size
+
+__all__ = ["make_production_mesh", "input_specs", "run_cell", "main"]
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct — no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(tree, mesh, specs):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        tree, specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, jax.Array)))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                n_nodes: int = 1, for_nodes: bool = False) -> dict:
+    """Abstract batch for a cell: weak-type-correct ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    def tok(bb, ss):
+        return jax.ShapeDtypeStruct((bb, ss), jnp.int32)
+
+    if cfg.is_encdec:
+        half = s // 2
+        batch = {"src_embeds": jax.ShapeDtypeStruct((b, half, cfg.d_model), dt),
+                 "tokens": tok(b, half)}
+    elif cfg.frontend == "vision":
+        batch = {"tokens": tok(b, s),
+                 "patch_embeds": jax.ShapeDtypeStruct((b, cfg.n_patches,
+                                                       cfg.d_model), dt)}
+    else:
+        batch = {"tokens": tok(b, s)}
+
+    if for_nodes:
+        batch = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((n_nodes, l.shape[0] // n_nodes,
+                                            *l.shape[1:]), l.dtype), batch)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def _analyze(lowered, compiled, default_group: int) -> dict:
+    info: dict[str, Any] = {}
+    try:
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    info[attr] = int(v)
+    except Exception as e:  # pragma: no cover
+        info["memory_analysis_error"] = str(e)
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        if cost:
+            info["flops"] = float(cost.get("flops", -1))
+            info["bytes_accessed"] = float(cost.get("bytes accessed", -1))
+            info["transcendentals"] = float(cost.get("transcendentals", -1))
+    except Exception as e:  # pragma: no cover
+        info["cost_analysis_error"] = str(e)
+    try:
+        txt = compiled.as_text()
+        info["collectives"] = collective_summary(txt, default_group)
+        info["collectives_split"] = collective_summary_split(txt, default_group)
+        info["hlo_bytes"] = len(txt)
+    except Exception as e:  # pragma: no cover
+        info["collective_parse_error"] = str(e)
+    return info
+
+
+def _train_cell(cfg, shape, mesh, run: RunConfig) -> tuple[Any, tuple, dict]:
+    api = build(cfg)
+    raxes = replica_axes(mesh)
+    n_nodes = int(np.prod([mesh.shape[a] for a in raxes]))
+    node_shape = tuple(mesh.shape[a] for a in raxes)
+    tp = tp_size(mesh)
+
+    extra: dict[str, Any] = {}
+    if run.mode == "dpsgd":
+        # bytes per rank for the controller: param bytes / tp shard
+        pshapes = jax.eval_shape(api.init, jax.random.key(0))
+        pbytes = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                     for l in jax.tree.leaves(pshapes))
+        if run.topology == "auto":
+            choice = choose_plan(raxes, node_shape, run.lambda_target,
+                                 bytes_per_rank=pbytes / tp, eta=run.eta)
+            plan = choice.plan
+            extra["plan"] = {"name": plan.name, "lam": choice.lam,
+                             "degree": plan.degree,
+                             "t_com_model_s": choice.t_com_s,
+                             "alternatives": choice.alternatives}
+        else:
+            from ..core.density_controller import candidate_plans, evaluate_plan
+            from ..core.comm_model import LinkModel
+            cands = candidate_plans(raxes, node_shape, include_onepeer=True)
+            named = {p.name: p for p in cands}
+            named.update({p.name.split("-")[0]: p for p in cands
+                          if p.name.startswith("onepeer")})
+            plan = named[run.topology]
+            lam, t = evaluate_plan(plan, pbytes / tp, LinkModel())
+            extra["plan"] = {"name": plan.name, "lam": lam, "degree": plan.degree,
+                             "t_com_model_s": t, "override": True}
+    else:
+        plan = None
+
+    step = make_train_step(api, run, plan, constant_lr(run.eta),
+                           node_axes=raxes if run.mode == "dpsgd" else None)
+    state_shapes = jax.eval_shape(
+        lambda k: init_train_state(api, run, k, n_nodes=n_nodes),
+        jax.random.key(0))
+
+    pspecs = shr.param_specs(state_shapes["params"], tp, kv_dim=cfg.kv_dim)
+    if run.mode == "dpsgd":
+        # leading node axis on params/opt/residual
+        node_axes = raxes if len(raxes) > 1 else raxes[0]
+        pspecs = jax.tree.map(lambda s: P(node_axes, *tuple(s)[1:]), pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+    ospecs = shr.param_specs(state_shapes["opt"], tp, kv_dim=cfg.kv_dim)
+    if run.mode == "dpsgd":
+        node_axes = raxes if len(raxes) > 1 else raxes[0]
+        ospecs = jax.tree.map(
+            lambda s: P(node_axes, *tuple(s)[1:]) if len(tuple(s)) > 0 else s,
+            ospecs, is_leaf=lambda x: isinstance(x, P))
+    state_specs: dict = {"params": pspecs, "opt": ospecs, "step": P()}
+    if "residual" in state_shapes:
+        state_specs["residual"] = pspecs  # residual mirrors params exactly
+
+    batch = input_specs(cfg, shape, n_nodes, for_nodes=(run.mode == "dpsgd"))
+    if run.mode == "dpsgd":
+        node_axes = raxes if len(raxes) > 1 else raxes[0]
+        bspecs = jax.tree.map(
+            lambda l: P(node_axes, *([None] * (len(l.shape) - 1))), batch,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    else:
+        bspecs = shr.batch_specs(batch, raxes, shape.global_batch, n_nodes)
+
+    state_in = _sds(state_shapes, mesh, state_specs)
+    batch_in = _sds(batch, mesh, bspecs)
+    fn = jax.jit(step, donate_argnums=(0,))
+    return fn, (state_in, batch_in), extra
+
+
+def _serve_cell(cfg, shape, mesh) -> tuple[Any, tuple, dict]:
+    api = build(cfg)
+    raxes = replica_axes(mesh)
+    n_batch_shards = int(np.prod([mesh.shape[a] for a in raxes]))
+    tp = tp_size(mesh)
+    b, s = shape.global_batch, shape.seq_len
+
+    params_shapes = jax.eval_shape(api.init, jax.random.key(0))
+    pspecs = shr.param_specs(params_shapes, tp, kv_dim=cfg.kv_dim)
+    params_in = _sds(params_shapes, mesh, pspecs)
+
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape)
+        bspecs = shr.batch_specs(batch, raxes, b, n_batch_shards)
+        batch_in = _sds(batch, mesh, bspecs)
+
+        def fn(params, batch):
+            return api.prefill(params, batch, max_len=shape.seq_len
+                               if not cfg.is_encdec else shape.seq_len // 2)
+        return jax.jit(fn), (params_in, batch_in), {}
+
+    # decode: one token against a seq_len cache
+    if cfg.is_encdec:
+        cache_shapes = jax.eval_shape(
+            lambda: encdec_mod.init_dec_cache(cfg, b, s, s // 2))
+    else:
+        cache_shapes = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, b, s))
+    cspecs = shr.cache_specs(cache_shapes, tp, raxes, b, n_batch_shards)
+    cache_in = _sds(cache_shapes, mesh, cspecs)
+    token_in = jax.ShapeDtypeStruct((b,), jnp.int32)
+    index_in = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, token, cache, index):
+        return api.decode_step(params, token, cache, index)
+
+    return jax.jit(fn, donate_argnums=(2,)), \
+        (params_in, token_in, cache_in, index_in), {}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             mode: str = "dpsgd", run: Optional[RunConfig] = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    result: dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "mode": mode,
+        "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+    }
+    ok, reason = cell_is_runnable(cfg, shape)
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    run = run or RunConfig(mode=mode)
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            fn, args, extra = _train_cell(cfg, shape, mesh, run)
+        else:
+            fn, args, extra = _serve_cell(cfg, shape, mesh)
+        result.update(extra)
+        with mesh:
+            lowered = fn.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        raxes = replica_axes(mesh)
+        n_nodes = int(np.prod([mesh.shape[a] for a in raxes]))
+        result.update(_analyze(lowered, compiled, default_group=n_nodes))
+        result["lower_s"] = round(t1 - t0, 2)
+        result["compile_s"] = round(t2 - t1, 2)
+        result["n_devices"] = int(np.prod(list(mesh.shape.values())))
+        result["status"] = "ok"
+    except Exception as e:
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    return result
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _cells():
+    for arch in ARCHS:
+        for shape in SHAPES:
+            yield arch, shape
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--mode", choices=["dpsgd", "allreduce"], default="dpsgd")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    # perf-iteration knobs (EXPERIMENTS.md §Perf)
+    ap.add_argument("--topology", default="auto")
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--compression", default="none", choices=["none", "bf16", "int8"])
+    ap.add_argument("--no-fused-gossip", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    args = ap.parse_args()
+    run_cfg = RunConfig(mode=args.mode, topology=args.topology,
+                        remat=args.remat, compression=args.compression,
+                        fused_gossip=not args.no_fused_gossip,
+                        microbatch=args.microbatch)
+
+    if args.list:
+        for arch, shape in _cells():
+            ok, reason = cell_is_runnable(get_config(arch), SHAPES[shape])
+            print(f"{arch:28s} {shape:12s} {'RUN' if ok else 'SKIP: ' + reason}")
+        return 0
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = list(_cells()) if args.all else [(args.arch, args.shape)]
+    failures = 0
+    for mesh_kind in meshes:
+        outdir = os.path.join(args.out, mesh_kind)
+        os.makedirs(outdir, exist_ok=True)
+        for arch, shape in cells:
+            tag = "" if args.mode == "dpsgd" else f"__{args.mode}"
+            if args.tag:
+                tag += f"__{args.tag}"
+            path = os.path.join(outdir, f"{arch}__{shape}{tag}.json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip-existing] {path}", flush=True)
+                continue
+            print(f"[dryrun] {arch} x {shape} on {mesh_kind} ({args.mode})",
+                  flush=True)
+            res = run_cell(arch, shape, mesh_kind, mode=args.mode, run=run_cfg)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            status = res["status"]
+            msg = res.get("error", "")[:200] if status == "error" else \
+                res.get("reason", "") if status == "skipped" else \
+                f"compile={res.get('compile_s')}s flops={res.get('flops', 0):.3g}"
+            print(f"  -> {status} {msg}", flush=True)
+            failures += status == "error"
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,5 @@
+from . import api, attention, cnn, encdec, layers, mla, moe, rglru, rwkv6, transformer
+from .api import ModelAPI, build
+
+__all__ = ["api", "attention", "cnn", "encdec", "layers", "mla", "moe",
+           "rglru", "rwkv6", "transformer", "ModelAPI", "build"]

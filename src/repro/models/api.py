@@ -1,0 +1,96 @@
+"""Uniform model facade: every architecture exposes the same five functions.
+
+* ``init(key) -> params``
+* ``loss(params, batch) -> scalar``         (teacher-forced train loss)
+* ``prefill(params, batch) -> (logits, cache)``
+* ``decode_step(params, token, cache, index) -> (logits, cache)``
+* ``make_inputs(shape, key) -> batch``      (synthetic, for smoke tests)
+
+``batch`` layouts per family:
+  lm / moe / ssm / hybrid: {"tokens": (B, S)}
+  vlm:                     {"tokens": (B, S), "patch_embeds": (B, P, d)}
+  encdec:                  {"src_embeds": (B, S/2, d), "tokens": (B, S/2)}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import encdec, transformer
+
+PyTree = Any
+
+__all__ = ["ModelAPI", "build"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], PyTree]
+    loss: Callable[..., jax.Array]
+    prefill: Callable[..., tuple[jax.Array, PyTree]]
+    decode_step: Callable[..., tuple[jax.Array, PyTree]]
+    make_inputs: Callable[..., dict]
+
+
+def _lm_make_inputs(cfg: ModelConfig, shape: ShapeConfig, key: jax.Array,
+                    batch_override: Optional[int] = None) -> dict:
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size, jnp.int32)
+    out = {"tokens": tokens}
+    if cfg.frontend == "vision":
+        out["patch_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (b, cfg.n_patches, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+    return out
+
+
+def _encdec_make_inputs(cfg: ModelConfig, shape: ShapeConfig, key: jax.Array,
+                        batch_override: Optional[int] = None) -> dict:
+    b = batch_override or shape.global_batch
+    half = max(shape.seq_len // 2, 8)
+    return {
+        "src_embeds": jax.random.normal(key, (b, half, cfg.d_model),
+                                        jnp.dtype(cfg.dtype)),
+        "tokens": jax.random.randint(jax.random.fold_in(key, 1), (b, half),
+                                     0, cfg.vocab_size, jnp.int32),
+    }
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    if cfg.is_encdec:
+        def loss(params, batch, remat="none"):
+            return encdec.encdec_loss(cfg, params, batch, remat=remat)
+
+        def prefill(params, batch, max_len=None):
+            return encdec.prefill(cfg, params, batch["src_embeds"],
+                                  batch["tokens"], max_len=max_len)
+
+        def decode(params, token, cache, index):
+            return encdec.decode_step(cfg, params, token, cache, index)
+
+        return ModelAPI(cfg, lambda k: encdec.init_params(cfg, k), loss,
+                        prefill, decode,
+                        lambda shape, key, batch_override=None:
+                        _encdec_make_inputs(cfg, shape, key, batch_override))
+
+    def loss(params, batch, remat="none"):
+        return transformer.lm_loss(cfg, params, batch, remat=remat)
+
+    def prefill(params, batch, max_len=None):
+        return transformer.prefill(cfg, params, batch["tokens"],
+                                   max_len=max_len,
+                                   patch_embeds=batch.get("patch_embeds"))
+
+    def decode(params, token, cache, index):
+        return transformer.decode_step(cfg, params, token, cache, index)
+
+    return ModelAPI(cfg, lambda k: transformer.init_params(cfg, k), loss,
+                    prefill, decode,
+                    lambda shape, key, batch_override=None:
+                    _lm_make_inputs(cfg, shape, key, batch_override))

@@ -1,0 +1,77 @@
+"""The paper's Fashion-MNIST CNN (§IV-A) — exactly 21 840 parameters.
+
+conv1 1->10 (5x5) -> maxpool 2x2 -> ReLU
+conv2 10->20 (5x5) [dropout] -> maxpool 2x2 -> ReLU
+flatten (320) -> fc1 320->50 ReLU [dropout] -> fc2 50->10 -> log-softmax
+
+Params: 260 + 5020 + 16050 + 510 = 21840; data size M = 21840 * 32 bits
+= 698 880 bits, the paper's Eq. 3 message size.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cnn_init", "cnn_apply", "cnn_loss", "cnn_accuracy", "PARAM_COUNT",
+           "MODEL_BITS"]
+
+PARAM_COUNT = 21_840
+MODEL_BITS = PARAM_COUNT * 32
+
+
+def cnn_init(key: jax.Array) -> dict:
+    k = jax.random.split(key, 4)
+
+    def conv(key, cin, cout, ksz):
+        scale = (cin * ksz * ksz) ** -0.5
+        return {"w": jax.random.normal(key, (cout, cin, ksz, ksz)) * scale,
+                "b": jnp.zeros((cout,))}
+
+    def fc(key, din, dout):
+        return {"w": jax.random.normal(key, (din, dout)) * din**-0.5,
+                "b": jnp.zeros((dout,))}
+
+    return {"conv1": conv(k[0], 1, 10, 5), "conv2": conv(k[1], 10, 20, 5),
+            "fc1": fc(k[2], 320, 50), "fc2": fc(k[3], 50, 10)}
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+
+
+def _conv(p: dict, x: jax.Array) -> jax.Array:
+    y = jax.lax.conv_general_dilated(x, p["w"], (1, 1), "VALID",
+                                     dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return y + p["b"][None, :, None, None]
+
+
+def cnn_apply(params: dict, images: jax.Array,
+              dropout_key: Optional[jax.Array] = None) -> jax.Array:
+    """images (B, 1, 28, 28) -> log-probs (B, 10). Dropout active iff a key
+    is passed (train mode), ratio 0.5 as in the paper."""
+    x = jax.nn.relu(_maxpool2(_conv(params["conv1"], images)))
+    x = _conv(params["conv2"], x)
+    if dropout_key is not None:
+        kd1, dropout_key = jax.random.split(dropout_key)
+        x = x * jax.random.bernoulli(kd1, 0.5, x.shape) * 2.0
+    x = jax.nn.relu(_maxpool2(x))
+    x = x.reshape(x.shape[0], -1)  # (B, 320)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    if dropout_key is not None:
+        x = x * jax.random.bernoulli(dropout_key, 0.5, x.shape) * 2.0
+    x = x @ params["fc2"]["w"] + params["fc2"]["b"]
+    return jax.nn.log_softmax(x, axis=-1)
+
+
+def cnn_loss(params: dict, batch: dict,
+             dropout_key: Optional[jax.Array] = None) -> jax.Array:
+    logp = cnn_apply(params, batch["images"], dropout_key)
+    return -jnp.take_along_axis(logp, batch["labels"][:, None], axis=1).mean()
+
+
+def cnn_accuracy(params: dict, images: jax.Array, labels: jax.Array) -> jax.Array:
+    pred = jnp.argmax(cnn_apply(params, images), axis=-1)
+    return (pred == labels).mean()

@@ -1,0 +1,137 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2's transformer core).
+
+The audio frontend is a stub per the assignment: ``src_embeds`` are
+*precomputed frame embeddings* (B, S_src, d_model) fed straight to the
+encoder (bidirectional full attention). The decoder is a causal stack whose
+every layer carries cross-attention over the encoder output.
+
+Shape convention for the assigned LM cells (DESIGN.md §6): a cell with
+seq_len S maps to S_src = S_tgt = S/2 so total processed positions match S.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import cross_entropy, norm, norm_init
+from .transformer import (_apply_layer, _embed, _init_layer, _init_layer_cache,
+                          _logits, layer_kinds)
+
+PyTree = Any
+
+__all__ = ["init_params", "apply", "encdec_loss", "encode", "prefill", "decode_step"]
+
+
+def _half_layers(cfg: ModelConfig) -> tuple[int, int]:
+    return cfg.encoder_layers, cfg.n_layers - cfg.encoder_layers
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    n_enc, n_dec = _half_layers(cfg)
+    keys = jax.random.split(key, 4)
+    kinds = layer_kinds(cfg)
+
+    def stack(base_key, n, cross):
+        return jax.vmap(lambda k: _init_layer(k, cfg, "global", False, cross=cross))(
+            jax.random.split(base_key, n))
+
+    params = {
+        "embed": {"embedding": (jax.random.normal(
+            keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * cfg.d_model**-0.5).astype(cfg.param_dtype)},
+        "encoder": stack(keys[1], n_enc, cross=False),
+        "decoder": stack(keys[2], n_dec, cross=True),
+        "enc_norm": norm_init(cfg.d_model, cfg.norm, cfg.param_dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, cfg.param_dtype),
+    }
+    del kinds
+    return params
+
+
+def _scan_stack(cfg: ModelConfig, stacked, x, *, positions, cross_src=None,
+                caches=None, cache_index=None, want_cache=False,
+                encoder_mode=False, remat: str = "none"):
+    def body(x, xs):
+        p, cache = xs
+        return _apply_layer(p, x, cfg, "global", positions=positions,
+                            cache=cache, cache_index=cache_index,
+                            cross_src=cross_src, want_cache=want_cache,
+                            encoder_mode=encoder_mode)
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    if caches is not None:
+        x, ys = jax.lax.scan(lambda c, xs: body(c, xs), x, (stacked, caches))
+    else:
+        def body_nc(x, p):
+            out, nc = body(x, (p, None))
+            return out, (nc if want_cache else 0)
+        x, ys = jax.lax.scan(body_nc, x, stacked)
+    return x, (ys if want_cache else None)
+
+
+def encode(cfg: ModelConfig, params: PyTree, src_embeds: jax.Array, *,
+           remat: str = "none") -> jax.Array:
+    """Bidirectional encoder over precomputed frame embeddings."""
+    s = src_embeds.shape[1]
+    x, _ = _scan_stack(cfg, params["encoder"], src_embeds.astype(cfg.dtype),
+                       positions=jnp.arange(s), encoder_mode=True, remat=remat)
+    return norm(params["enc_norm"], x, cfg.norm)
+
+
+def apply(cfg: ModelConfig, params: PyTree, src_embeds: jax.Array,
+          tgt_tokens: jax.Array, *, remat: str = "none") -> jax.Array:
+    """Teacher-forced: (B,S_src,d) x (B,S_tgt) -> (B,S_tgt,V) logits."""
+    enc = encode(cfg, params, src_embeds, remat=remat)
+    x = _embed(cfg, params, tgt_tokens)
+    x, _ = _scan_stack(cfg, params["decoder"], x,
+                       positions=jnp.arange(tgt_tokens.shape[1]),
+                       cross_src=enc, remat=remat)
+    return _logits(cfg, params, x)
+
+
+def encdec_loss(cfg: ModelConfig, params: PyTree, batch: dict, *,
+                remat: str = "none") -> jax.Array:
+    logits = apply(cfg, params, batch["src_embeds"], batch["tokens"], remat=remat)
+    return cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+
+
+def init_dec_cache(cfg: ModelConfig, batch: int, max_len: int, cross_len: int,
+                   dtype=None) -> PyTree:
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    _, n_dec = _half_layers(cfg)
+    one = _init_layer_cache(cfg, "global", batch, max_len, dtype,
+                            cross=True, cross_len=cross_len)
+    return jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n_dec, *l.shape)),
+                        one)
+
+
+def prefill(cfg: ModelConfig, params: PyTree, src_embeds: jax.Array,
+            tgt_tokens: jax.Array, *, max_len: Optional[int] = None
+            ) -> tuple[jax.Array, PyTree]:
+    """Encode + run the target prompt; returns (last logits, decoder caches)."""
+    b, s_tgt = tgt_tokens.shape
+    max_len = max_len or s_tgt
+    enc = encode(cfg, params, src_embeds)
+    caches = init_dec_cache(cfg, b, max_len, src_embeds.shape[1])
+    x = _embed(cfg, params, tgt_tokens)
+    x, new_caches = _scan_stack(cfg, params["decoder"], x,
+                                positions=jnp.arange(s_tgt), cross_src=enc,
+                                caches=caches, want_cache=True)
+    return _logits(cfg, params, x[:, -1:])[:, 0], new_caches
+
+
+def decode_step(cfg: ModelConfig, params: PyTree, token: jax.Array,
+                caches: PyTree, index: jax.Array) -> tuple[jax.Array, PyTree]:
+    """One target-token decode with cached encoder K/V (cross_src=None)."""
+    x = _embed(cfg, params, token[:, None])
+    x, new_caches = _scan_stack(cfg, params["decoder"], x, positions=index[None],
+                                caches=caches, cache_index=index,
+                                want_cache=True)
+    return _logits(cfg, params, x)[:, 0], new_caches

@@ -1,0 +1,122 @@
+"""Griffin recurrent block: temporal conv + RG-LRU gated linear recurrence.
+
+Block(x):
+    gate  = gelu(W_gate x)                        (d_rnn)
+    u     = causal_conv1d(W_x x, width)           (d_rnn)
+    h     = RG-LRU(u)                             (d_rnn)
+    y     = W_out (h * gate)                      (d_model)
+
+RG-LRU (Real-Gated LRU, De et al. 2024):
+    r_t = sigmoid(W_a u_t + b_a)
+    i_t = sigmoid(W_i u_t + b_i)
+    log a_t = -c * r_t * softplus(Lambda)         (a = sigmoid(Lambda)^(c r_t))
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Train/prefill runs the recurrence as a log-depth ``jax.lax.associative_scan``
+(h_t = a_t h_{t-1} + b_t is associative) — the TPU-native formulation; decode
+is the one-step update. State: {conv: (B, width-1, d_rnn), h: (B, d_rnn)}.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RGLRUConfig
+from .layers import dense, dense_init
+
+__all__ = ["rglru_init", "init_rglru_state", "rglru_apply", "linear_recurrence"]
+
+
+def rglru_init(key, cfg: ModelConfig, r: RGLRUConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    d, dr = cfg.d_model, r.d_rnn
+    lam = jax.random.uniform(ks[0], (dr,), jnp.float32, 1.0, 5.0)  # softplus(Λ) ~ O(1)
+    return {
+        "w_x": dense_init(ks[1], d, dr, dtype=cfg.param_dtype),
+        "w_gate": dense_init(ks[2], d, dr, dtype=cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[3], (r.conv_width, dr), jnp.float32)
+                   * r.conv_width**-0.5).astype(cfg.param_dtype),
+        # fused recurrence/input gates: ONE (dr, dr, 2) projection => a single
+        # (bf16) all-gather of the conv output feeds both gates, and the
+        # channel-sharded output needs no resharding to split (EXPERIMENTS.md
+        # §Perf cell B; was separate w_a/w_i f32 matmuls = 4x the link bytes).
+        "w_ai": (jax.random.normal(ks[4], (dr, dr, 2), jnp.float32)
+                 * dr**-0.5).astype(cfg.param_dtype),
+        "b_ai": jnp.zeros((dr, 2), cfg.param_dtype),
+        "lam": lam.astype(cfg.param_dtype),
+        "w_out": dense_init(jax.random.fold_in(key, 7), dr, d, dtype=cfg.param_dtype),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, r: RGLRUConfig, batch: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, r.conv_width - 1, r.d_rnn), dtype),
+        "h": jnp.zeros((batch, r.d_rnn), jnp.float32),
+    }
+
+
+def linear_recurrence(a: jax.Array, b: jax.Array,
+                      h0: Optional[jax.Array] = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t along axis 1 (time), log-depth.
+
+    a, b: (B, S, D). Returns h (B, S, D). h0: (B, D) initial state."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def op(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, state: Optional[jax.Array]) -> jax.Array:
+    """Depthwise causal conv along time. u (B,S,D), w (width,D)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = jnp.zeros_like(u)
+    for i in range(width):
+        out = out + up[:, i: i + u.shape[1]] * w[width - 1 - i][None, None, :]
+    return out
+
+
+def rglru_apply(p: dict, x: jax.Array, cfg: ModelConfig, *, r: RGLRUConfig,
+                state: Optional[dict] = None,
+                return_state: bool = False) -> tuple[jax.Array, Optional[dict]]:
+    """x: (B, S, d_model). If ``state`` is given (decode/resume), the conv and
+    recurrence continue from it; new state returned when ``return_state``."""
+    dt = jnp.dtype(cfg.dtype)
+    b, s, _ = x.shape
+    gate = jax.nn.gelu(dense(p["w_gate"], x, dt))
+    u_pre = dense(p["w_x"], x, dt)
+    conv_state = state["conv"] if state is not None else None
+    u = _causal_conv(u_pre, p["conv_w"].astype(dt), conv_state)
+
+    # fused gates in compute dtype (bf16 gather), sigmoid in fp32
+    ai = jnp.einsum("bsd,dre->bsre", u, p["w_ai"].astype(dt)) \
+        + p["b_ai"].astype(dt)[None, None]
+    rg = jax.nn.sigmoid(ai[..., 0].astype(jnp.float32))
+    ig = jax.nn.sigmoid(ai[..., 1].astype(jnp.float32))
+    log_a = -r.c * rg * jax.nn.softplus(p["lam"].astype(jnp.float32))[None, None, :]
+    a = jnp.exp(log_a)
+    binp = jnp.sqrt(jnp.maximum(1.0 - a**2, 1e-12)) * (ig * u.astype(jnp.float32))
+
+    h0 = state["h"] if state is not None else None
+    h = linear_recurrence(a, binp, h0)
+
+    y = dense(p["w_out"], (h.astype(dt) * gate), dt)
+    new_state = None
+    if return_state:
+        prev = (conv_state.astype(dt) if conv_state is not None
+                else jnp.zeros((b, r.conv_width - 1, r.d_rnn), dt))
+        tail = jnp.concatenate([prev, u_pre.astype(dt)], axis=1)[:, -(r.conv_width - 1):]
+        new_state = {"conv": tail, "h": h[:, -1].astype(jnp.float32)}
+    return y, new_state

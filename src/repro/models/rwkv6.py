@@ -1,0 +1,224 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Time-mix (per head, head_size D):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state S in R^{DxD})
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+with the *data-dependent* per-channel decay (the defining Finch feature):
+    w_t = exp(-exp(w0 + tanh(x_w A1) A2))        in (0, 1)
+
+Token-shift mixing uses static lerp weights (mu_*); the ddlerp LoRAs of the
+full Finch recipe are applied to the decay only — documented simplification
+(DESIGN.md §6): the data-dependent decay is retained, the five per-projection
+shift LoRAs are folded to static mixes.
+
+Train/prefill uses **chunked** evaluation (chunk c): intra-chunk pairwise
+decays are exact via a (c, c, D) per-head einsum in fp32 (no underflow: only
+products over (i, t] are formed, never 1/P), inter-chunk state is carried by a
+``lax.scan``. Decode is the exact single-step recurrence. The Pallas kernel
+(kernels/rwkv6_scan.py) implements the same chunked scheme with VMEM tiles.
+
+Channel-mix:  k = relu(W_k x_k)^2; out = sigmoid(W_r x_r) * (W_v k).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RWKVConfig
+from .layers import dense, dense_init
+
+__all__ = ["rwkv_init", "init_rwkv_state", "rwkv_time_mix", "rwkv_channel_mix",
+           "wkv_chunked", "wkv_step"]
+
+
+def rwkv_init(key, cfg: ModelConfig, r: RWKVConfig) -> dict:
+    ks = jax.random.split(key, 12)
+    d = cfg.d_model
+    pd = cfg.param_dtype
+
+    def mu(k):
+        return jax.random.uniform(k, (d,), jnp.float32, 0.0, 1.0).astype(pd)
+
+    return {
+        # time-mix
+        "mu_r": mu(ks[0]), "mu_k": mu(ks[1]), "mu_v": mu(ks[2]),
+        "mu_w": mu(ks[3]), "mu_g": mu(ks[4]),
+        "w_r": dense_init(ks[5], d, d, dtype=pd),
+        "w_k": dense_init(ks[6], d, d, dtype=pd),
+        "w_v": dense_init(ks[7], d, d, dtype=pd),
+        "w_g": dense_init(ks[8], d, d, dtype=pd),
+        "w_o": dense_init(ks[9], d, d, dtype=pd),
+        "w0": (jax.random.uniform(ks[10], (d,), jnp.float32, 0.5, 2.0)).astype(pd),
+        "w_lora_a": (jax.random.normal(ks[11], (d, r.decay_lora), jnp.float32)
+                     * d**-0.5).astype(pd),
+        "w_lora_b": (jax.random.normal(jax.random.fold_in(key, 20),
+                                       (r.decay_lora, d), jnp.float32)
+                     * r.decay_lora**-0.5).astype(pd),
+        "u": (jax.random.normal(jax.random.fold_in(key, 21), (d,), jnp.float32)
+              * 0.1).astype(pd),
+        "ln_scale": jnp.ones((d,), pd),  # group-norm over heads
+        # channel-mix
+        "cmu_r": mu(jax.random.fold_in(key, 22)),
+        "cmu_k": mu(jax.random.fold_in(key, 23)),
+        "cw_r": dense_init(jax.random.fold_in(key, 24), d, d, dtype=pd),
+        "cw_k": dense_init(jax.random.fold_in(key, 25), d,
+                           r.d_ff or cfg.d_ff, dtype=pd),
+        "cw_v": dense_init(jax.random.fold_in(key, 26), r.d_ff or cfg.d_ff,
+                           d, dtype=pd),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, r: RWKVConfig, batch: int, dtype) -> dict:
+    h = cfg.d_model // r.head_size
+    return {
+        "shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, h, r.head_size, r.head_size), jnp.float32),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Previous token per position; ``prev`` (B, d) seeds position 0."""
+    if prev is None:
+        prev_col = jnp.zeros_like(x[:, :1])
+    else:
+        prev_col = prev[:, None, :].astype(x.dtype)
+    return jnp.concatenate([prev_col, x[:, :-1]], axis=1)
+
+
+def wkv_step(s: jax.Array, r: jax.Array, k: jax.Array, v: jax.Array,
+             w: jax.Array, u: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Exact one-token update. s (B,H,D,D); r,k,v,w (B,H,D); u (H,D).
+    Returns (new_state, y (B,H,D))."""
+    kv = k[..., :, None] * v[..., None, :]                    # (B,H,D,D)
+    y = jnp.einsum("bhd,bhde->bhe", r, s + u[None, :, :, None] * kv)
+    s_new = w[..., :, None] * s + kv
+    return s_new, y
+
+
+def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                u: jax.Array, s0: Optional[jax.Array] = None,
+                chunk: int = 32) -> tuple[jax.Array, jax.Array]:
+    """Chunked WKV. r,k,v,w: (B,S,H,D) fp32; u: (H,D). Returns (y, s_final).
+
+    Per chunk (length c), with lw = log w and L_t = sum_{j<=t} lw_j:
+      inter:  y_t += r_t^T diag(exp(L_{t-1})) S_0
+      intra:  y_t += sum_{i<t} [sum_d r_td k_id exp(L_{t-1,d} - L_{i,d})] v_i
+      bonus:  y_t += (r_t . u k_t) v_t
+      state:  S_c = diag(exp(L_c)) S_0 + sum_i diag(exp(L_c - L_i)) k_i v_i^T
+    Only exponents of non-positive values are formed => no overflow."""
+    b, s, h, d = r.shape
+    pad = (-s) % chunk
+    if pad:
+        zeros = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    sp = r.shape[1]
+    n = sp // chunk
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(b, n, chunk, h, d), 1, 0)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    lw = jnp.log(jnp.maximum(wc, 1e-12))                       # (n,B,c,H,D)
+    lcum = jnp.cumsum(lw, axis=2)                              # L_t (inclusive)
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)       # i < t
+
+    def body(state, blk):
+        rb, kb, vb, lb = blk                                   # (B,c,H,D)
+        lprev = lb - jnp.diff(jnp.pad(lb, ((0, 0), (1, 0), (0, 0), (0, 0))),
+                              axis=1)                          # L_{t-1} = L_t - lw_t
+        # inter-chunk: r_t * exp(L_{t-1}) against carried state
+        rdec = rb * jnp.exp(lprev)
+        y = jnp.einsum("bchd,bhde->bche", rdec, state)
+        # intra-chunk pairwise: exp(L_{t-1,d} - L_{i,d}) for i < t (<= 0 exponent)
+        diff = lprev[:, :, None, :, :] - lb[:, None, :, :, :]  # (B,c_t,c_i,H,D)
+        att = jnp.einsum("bthd,bihd,btihd->bthi",
+                         rb, kb, jnp.exp(jnp.minimum(diff, 0.0)))
+        att = att * tri[None, :, None, :]
+        y = y + jnp.einsum("bthi,bihd->bthd", att, vb)
+        # bonus (current token): y_t += (r_t . (u * k_t)) v_t
+        y = y + jnp.sum(rb * u[None, None] * kb, axis=-1, keepdims=True) * vb
+        # state update
+        lc = lb[:, -1:, :, :]                                  # L_c
+        kdec = kb * jnp.exp(jnp.minimum(lc - lb, 0.0))
+        state = jnp.exp(lc[:, 0])[..., None] * state + jnp.einsum(
+            "bchd,bche->bhde", kdec, vb)
+        return state, y
+
+    s_final, yc = jax.lax.scan(body, s0, (rc, kc, vc, lcum))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, sp, h, d)[:, :s]
+    return y, s_final
+
+
+def rwkv_time_mix(p: dict, x: jax.Array, cfg: ModelConfig, r: RWKVConfig, *,
+                  state: Optional[dict] = None,
+                  return_state: bool = False,
+                  chunk: int = 32) -> tuple[jax.Array, Optional[dict]]:
+    dt = jnp.dtype(cfg.dtype)
+    b, s, d = x.shape
+    h = d // r.head_size
+    prev = state["shift_tm"] if state is not None else None
+    xs = _token_shift(x, prev)
+
+    def mixed(mu):
+        return x + (xs - x) * mu.astype(dt)[None, None, :]
+
+    rr = dense(p["w_r"], mixed(p["mu_r"]), dt)
+    kk = dense(p["w_k"], mixed(p["mu_k"]), dt)
+    vv = dense(p["w_v"], mixed(p["mu_v"]), dt)
+    gg = dense(p["w_g"], mixed(p["mu_g"]), dt)
+    xw = mixed(p["mu_w"]).astype(jnp.float32)
+    dec_in = jnp.tanh(xw @ p["w_lora_a"].astype(jnp.float32)) @ p["w_lora_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32)[None, None] + dec_in))  # (B,S,d) in (0,1)
+
+    shp = (b, s, h, r.head_size)
+    r4 = rr.astype(jnp.float32).reshape(shp)
+    k4 = kk.astype(jnp.float32).reshape(shp)
+    v4 = vv.astype(jnp.float32).reshape(shp)
+    w4 = w.reshape(shp)
+    u2 = p["u"].astype(jnp.float32).reshape(h, r.head_size)
+
+    s0 = state["wkv"] if state is not None else None
+    if s == 1 and state is not None:
+        s_new, y4 = wkv_step(s0, r4[:, 0], k4[:, 0], v4[:, 0], w4[:, 0], u2)
+        y = y4[:, None]
+    else:
+        y, s_new = wkv_chunked(r4, k4, v4, w4, u2, s0, chunk=chunk)
+        y = y.reshape(b, s, h, r.head_size)
+
+    # group-norm over each head, then gate
+    y32 = y.astype(jnp.float32)
+    mu_ = y32.mean(-1, keepdims=True)
+    var = y32.var(-1, keepdims=True)
+    y32 = (y32 - mu_) * jax.lax.rsqrt(var + 1e-5)
+    y32 = y32.reshape(b, s, d) * p["ln_scale"].astype(jnp.float32)[None, None]
+    out = dense(p["w_o"], (y32.astype(dt) * jax.nn.silu(gg)), dt)
+
+    new_state = None
+    if return_state:
+        new_state = {"shift_tm": x[:, -1].astype(dt), "wkv": s_new}
+    return out, new_state
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array, cfg: ModelConfig, r: RWKVConfig, *,
+                     state: Optional[dict] = None,
+                     return_state: bool = False) -> tuple[jax.Array, Optional[dict]]:
+    dt = jnp.dtype(cfg.dtype)
+    prev = state["shift_cm"] if state is not None else None
+    xs = _token_shift(x, prev)
+
+    def mixed(mu):
+        return x + (xs - x) * mu.astype(dt)[None, None, :]
+
+    kk = jnp.square(jax.nn.relu(dense(p["cw_k"], mixed(p["cmu_k"]), dt)))
+    out = jax.nn.sigmoid(dense(p["cw_r"], mixed(p["cmu_r"]), dt)) * dense(p["cw_v"], kk, dt)
+    new_state = {"shift_cm": x[:, -1].astype(dt)} if return_state else None
+    return out, new_state

@@ -1,0 +1,380 @@
+"""Decoder-only LM assembly: pattern-unit scan over heterogeneous layers.
+
+Layers are grouped as ``prologue + repeats x pattern-unit + tail``:
+* prologue = ``first_k_dense`` unrolled layers (DeepSeek's dense-first-layer),
+* the pattern unit (e.g. gemma3's 5xlocal + 1xglobal) is scanned with params
+  stacked over ``repeats`` — HLO size stays O(|unit|), not O(n_layers),
+* tail = remainder layers unrolled (recurrentgemma's 26 = 8x(R,R,A) + R,R).
+
+Every layer is pre-norm residual: x += mixer(norm1(x)); x += mlp(norm2(x)).
+RWKV layers use (time-mix, channel-mix) as (mixer, mlp). Caches/states for
+serving are pytrees stacked the same way and threaded through the scan as
+xs/ys so decode stays a single fused loop.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention, mla, moe, rglru, rwkv6
+from .layers import cross_entropy, embed_init, mlp, mlp_init, norm, norm_init
+
+PyTree = Any
+
+__all__ = ["layer_kinds", "layer_groups", "init_params", "apply", "lm_loss",
+           "init_cache", "prefill", "decode_step"]
+
+
+# ---------------------------------------------------------------------------
+# Layout helpers
+# ---------------------------------------------------------------------------
+
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    u = len(cfg.pattern)
+    return [cfg.pattern[i % u] for i in range(cfg.n_layers)]
+
+
+def layer_groups(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(prologue, repeats, tail) layer counts; prologue/tail are unrolled."""
+    pro = cfg.first_k_dense
+    u = len(cfg.pattern)
+    rest = cfg.n_layers - pro
+    return pro, rest // u, rest % u
+
+
+def _mixer_kind(cfg: ModelConfig, kind: str) -> str:
+    """Dense archs with MLA swap 'global' attention for MLA."""
+    if kind == "global" and cfg.mla is not None:
+        return "mla"
+    return kind
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, kind: str, is_moe: bool,
+                cross: bool = False) -> dict:
+    kind = _mixer_kind(cfg, kind)
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": norm_init(cfg.d_model, cfg.norm, cfg.param_dtype),
+               "norm2": norm_init(cfg.d_model, cfg.norm, cfg.param_dtype)}
+    if kind in ("global", "local"):
+        p["attn"] = attention.attn_init(ks[0], cfg)
+    elif kind == "mla":
+        p["attn"] = mla.mla_init(ks[0], cfg, cfg.mla)
+    elif kind == "rglru":
+        p["rec"] = rglru.rglru_init(ks[0], cfg, cfg.rglru)
+    elif kind == "rwkv":
+        p["rwkv"] = rwkv6.rwkv_init(ks[0], cfg, cfg.rwkv)
+        return p  # rwkv owns both halves (time-mix + channel-mix)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["norm_cross"] = norm_init(cfg.d_model, cfg.norm, cfg.param_dtype)
+        p["cross"] = attention.attn_init(ks[1], cfg, cross=True)
+    if is_moe:
+        p["moe"] = moe.moe_init(ks[2], cfg, cfg.moe)
+    else:
+        d_ff = cfg.dense_d_ff if (cfg.moe is not None and cfg.dense_d_ff) else cfg.d_ff
+        p["mlp"] = mlp_init(ks[2], cfg.d_model, d_ff, cfg.mlp_kind, cfg.param_dtype)
+    return p
+
+
+def _apply_layer(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
+                 positions: jax.Array,
+                 cache: Optional[dict] = None,
+                 cache_index: Optional[jax.Array] = None,
+                 cross_src: Optional[jax.Array] = None,
+                 want_cache: bool = False,
+                 encoder_mode: bool = False) -> tuple[jax.Array, Optional[dict]]:
+    kind = _mixer_kind(cfg, kind)
+    dt = jnp.dtype(cfg.dtype)
+    new_cache: dict = {}
+
+    if kind == "rwkv":
+        st = cache.get("rwkv") if cache else None
+        y, st_tm = rwkv6.rwkv_time_mix(
+            p["rwkv"], norm(p["norm1"], x, cfg.norm), cfg, cfg.rwkv,
+            state=st, return_state=want_cache)
+        x = x + y
+        y2, st_cm = rwkv6.rwkv_channel_mix(
+            p["rwkv"], norm(p["norm2"], x, cfg.norm), cfg, cfg.rwkv,
+            state=st, return_state=want_cache)
+        x = x + y2
+        if want_cache:
+            new_cache["rwkv"] = {**st_tm, **st_cm}
+        return x, (new_cache if want_cache else None)
+
+    h = norm(p["norm1"], x, cfg.norm)
+    if kind in ("global", "local"):
+        eff_kind = kind
+        y, attn_cache = attention.attn_apply(
+            p["attn"], h, cfg, kind=eff_kind, positions=positions,
+            cache=cache.get("attn") if cache else None, cache_index=cache_index,
+            causal_override=False if encoder_mode else None)
+        if want_cache:
+            new_cache["attn"] = attn_cache
+    elif kind == "mla":
+        y, attn_cache = mla.mla_apply(
+            p["attn"], h, cfg, m=cfg.mla, positions=positions,
+            cache=cache.get("attn") if cache else None, cache_index=cache_index)
+        if want_cache:
+            new_cache["attn"] = attn_cache
+    elif kind == "rglru":
+        st = cache.get("rec") if cache else None
+        y, st_new = rglru.rglru_apply(p["rec"], h, cfg, r=cfg.rglru, state=st,
+                                      return_state=want_cache)
+        if want_cache:
+            new_cache["rec"] = st_new
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    if "cross" in p:
+        hc = norm(p["norm_cross"], x, cfg.norm)
+        yc, cross_cache = attention.attn_apply(
+            p["cross"], hc, cfg, kind="cross", positions=positions,
+            cache=cache.get("cross") if cache else None,
+            cache_index=cache_index, kv_src=cross_src)
+        x = x + yc
+        if want_cache:
+            new_cache["cross"] = cross_cache
+
+    h2 = norm(p["norm2"], x, cfg.norm)
+    if "moe" in p:
+        x = x + moe.moe_apply(p["moe"], h2, cfg, cfg.moe)
+    else:
+        x = x + mlp(p["mlp"], h2, cfg.mlp_kind, dt)
+    return x, (new_cache if want_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Layer cache init (per kind)
+# ---------------------------------------------------------------------------
+
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      dtype, cross: bool = False, cross_len: int = 0) -> dict:
+    kind = _mixer_kind(cfg, kind)
+    c: dict = {}
+    if kind in ("global", "local"):
+        c["attn"] = attention.init_attn_cache(cfg, kind, batch, max_len, dtype)
+    elif kind == "mla":
+        c["attn"] = mla.init_mla_cache(cfg, cfg.mla, batch, max_len, dtype)
+    elif kind == "rglru":
+        c["rec"] = rglru.init_rglru_state(cfg, cfg.rglru, batch, dtype)
+    elif kind == "rwkv":
+        c["rwkv"] = rwkv6.init_rwkv_state(cfg, cfg.rwkv, batch, dtype)
+    if cross:
+        c["cross"] = {
+            "k": jnp.zeros((batch, cross_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, cross_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Stack init / apply
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array, cross: bool = False) -> PyTree:
+    """Full parameter tree. Scanned-unit params carry a leading repeats dim."""
+    pro, repeats, tail = layer_groups(cfg)
+    kinds = layer_kinds(cfg)
+    u = len(cfg.pattern)
+    keys = jax.random.split(key, 8)
+    params: dict = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model,
+                                        cfg.param_dtype)}
+
+    def moe_flag(layer_idx: int) -> bool:
+        return cfg.moe is not None and layer_idx >= cfg.first_k_dense
+
+    params["prologue"] = [
+        _init_layer(jax.random.fold_in(keys[1], i), cfg, kinds[i], moe_flag(i), cross)
+        for i in range(pro)
+    ]
+    unit: list = []
+    for j in range(u):
+        layer_idx = pro + j
+        init_one = lambda k, j=j, layer_idx=layer_idx: _init_layer(
+            k, cfg, kinds[layer_idx], moe_flag(layer_idx), cross)
+        stacked = jax.vmap(init_one)(
+            jax.random.split(jax.random.fold_in(keys[2], j), max(repeats, 1)))
+        unit.append(stacked)
+    params["unit"] = unit if repeats > 0 else []
+    params["tail"] = [
+        _init_layer(jax.random.fold_in(keys[3], i), cfg,
+                    kinds[pro + repeats * u + i], moe_flag(pro + repeats * u + i), cross)
+        for i in range(tail)
+    ]
+    params["final_norm"] = norm_init(cfg.d_model, cfg.norm, cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": (jax.random.normal(keys[4], (cfg.d_model, cfg.vocab_size),
+                                    jnp.float32) * cfg.d_model**-0.5
+                  ).astype(cfg.param_dtype)}
+    return params
+
+
+def _embed(cfg: ModelConfig, params: PyTree, tokens: jax.Array,
+           patch_embeds: Optional[jax.Array] = None) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    e = params["embed"]["embedding"].astype(dt)[tokens]
+    e = e * jnp.asarray(cfg.d_model**0.5, dt)  # gemma-style embed scaling
+    if patch_embeds is not None and cfg.frontend == "vision":
+        npatch = patch_embeds.shape[1]
+        e = jnp.concatenate([patch_embeds.astype(dt), e[:, npatch:]], axis=1)
+    return e
+
+
+def _logits(cfg: ModelConfig, params: PyTree, x: jax.Array) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    x = norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["embedding"].astype(dt).T
+    else:
+        logits = x @ params["lm_head"]["w"].astype(dt)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+def _run_stack(cfg: ModelConfig, params: PyTree, x: jax.Array, *,
+               positions: jax.Array,
+               caches: Optional[dict] = None,
+               cache_index: Optional[jax.Array] = None,
+               cross_src: Optional[jax.Array] = None,
+               want_cache: bool = False,
+               encoder_mode: bool = False,
+               remat: str = "none") -> tuple[jax.Array, Optional[dict]]:
+    pro, repeats, tail = layer_groups(cfg)
+    kinds = layer_kinds(cfg)
+    u = len(cfg.pattern)
+    new_caches: dict = {"prologue": [], "unit": None, "tail": []}
+
+    def run_layer(p, x, kind, cache):
+        return _apply_layer(p, x, cfg, kind, positions=positions, cache=cache,
+                            cache_index=cache_index, cross_src=cross_src,
+                            want_cache=want_cache, encoder_mode=encoder_mode)
+
+    for i, p in enumerate(params["prologue"]):
+        cache = caches["prologue"][i] if caches else None
+        x, nc = run_layer(p, x, kinds[i], cache)
+        new_caches["prologue"].append(nc)
+
+    if repeats > 0:
+        unit_kinds = [kinds[pro + j] for j in range(u)]
+
+        def unit_body(x, xs):
+            unit_params, unit_caches = xs
+            out_caches = []
+            for j in range(u):
+                cache_j = unit_caches[j] if unit_caches is not None else None
+                x, nc = run_layer(unit_params[j], x, unit_kinds[j], cache_j)
+                out_caches.append(nc if nc is not None else 0)
+            return x, (tuple(out_caches) if want_cache else 0)
+
+        if remat == "full":
+            unit_body = jax.checkpoint(unit_body)
+        elif remat == "dots":
+            unit_body = jax.checkpoint(
+                unit_body, policy=jax.checkpoint_policies.checkpoint_dots)
+
+        unit_caches_xs = tuple(caches["unit"]) if caches else None
+        xs = (tuple(params["unit"]), unit_caches_xs) if caches else (
+            tuple(params["unit"]), None)
+
+        def scan_body(x, xs_slice):
+            return unit_body(x, xs_slice)
+
+        if caches:
+            x, ys = jax.lax.scan(scan_body, x, xs)
+        else:
+            # no caches: scan only over params
+            def scan_body_nc(x, up):
+                return unit_body(x, (up, None))
+            x, ys = jax.lax.scan(scan_body_nc, x, tuple(params["unit"]))
+        if want_cache:
+            new_caches["unit"] = list(ys)
+
+    for i, p in enumerate(params["tail"]):
+        li = pro + repeats * u + i
+        cache = caches["tail"][i] if caches else None
+        x, nc = run_layer(p, x, kinds[li], cache)
+        new_caches["tail"].append(nc)
+
+    return x, (new_caches if want_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def apply(cfg: ModelConfig, params: PyTree, tokens: jax.Array, *,
+          patch_embeds: Optional[jax.Array] = None,
+          remat: str = "none") -> jax.Array:
+    """Teacher-forced forward: (B, S) tokens -> (B, S, V) logits."""
+    x = _embed(cfg, params, tokens, patch_embeds)
+    positions = jnp.arange(tokens.shape[1])
+    x, _ = _run_stack(cfg, params, x, positions=positions, remat=remat)
+    return _logits(cfg, params, x)
+
+
+def lm_loss(cfg: ModelConfig, params: PyTree, batch: dict, *,
+            remat: str = "none") -> jax.Array:
+    """Next-token cross entropy on batch["tokens"] (B, S)."""
+    tokens = batch["tokens"]
+    logits = apply(cfg, params, tokens,
+                   patch_embeds=batch.get("patch_embeds"), remat=remat)
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    """Serving cache pytree matching the stack layout."""
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    pro, repeats, tail = layer_groups(cfg)
+    kinds = layer_kinds(cfg)
+    u = len(cfg.pattern)
+
+    def one(kind):
+        return _init_layer_cache(cfg, kind, batch, max_len, dtype)
+
+    caches: dict = {
+        "prologue": [one(kinds[i]) for i in range(pro)],
+        "unit": [jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (repeats, *l.shape)).copy(),
+            one(kinds[pro + j])) for j in range(u)] if repeats else [],
+        "tail": [one(kinds[pro + repeats * u + i]) for i in range(tail)],
+    }
+    return caches
+
+
+def prefill(cfg: ModelConfig, params: PyTree, tokens: jax.Array, *,
+            max_len: Optional[int] = None,
+            patch_embeds: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
+    """Run the prompt, returning (last-position logits (B, V), filled cache)."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    caches = init_cache(cfg, b, max_len)
+    x = _embed(cfg, params, tokens, patch_embeds)
+    positions = jnp.arange(s)
+    x, new_caches = _run_stack(cfg, params, x, positions=positions,
+                               caches=caches, want_cache=True)
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits[:, 0], new_caches
+
+
+def decode_step(cfg: ModelConfig, params: PyTree, token: jax.Array,
+                caches: dict, index: jax.Array) -> tuple[jax.Array, dict]:
+    """One decode step: token (B,), index scalar -> (logits (B, V), caches)."""
+    x = _embed(cfg, params, token[:, None])
+    positions = index[None]
+    x, new_caches = _run_stack(cfg, params, x, positions=positions,
+                               caches=caches, cache_index=index,
+                               want_cache=True)
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], new_caches

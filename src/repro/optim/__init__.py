@@ -1,0 +1,5 @@
+from .optimizers import Optimizer, make_optimizer
+from .schedule import constant_lr, cosine_lr, warmup_cosine
+
+__all__ = ["Optimizer", "make_optimizer", "constant_lr", "cosine_lr",
+           "warmup_cosine"]

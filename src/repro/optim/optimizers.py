@@ -1,0 +1,95 @@
+"""Minimal pure-JAX optimizers (no optax offline): SGD / momentum / AdamW.
+
+API: ``opt.init(params) -> state``; ``opt.update(grads, state, params, lr)
+-> (new_params, new_state)``. All updates are elementwise, so they vmap over
+the D-PSGD node axis unchanged (each node owns its optimizer state, as in the
+paper where each node runs plain SGD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["Optimizer", "make_optimizer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]
+
+
+def _tree_zeros_like(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def _clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def make_optimizer(name: str, *, momentum: float = 0.0,
+                   weight_decay: float = 0.0,
+                   beta1: float = 0.9, beta2: float = 0.95,
+                   eps: float = 1e-8,
+                   grad_clip: Optional[float] = None) -> Optimizer:
+    def maybe_clip(grads):
+        return _clip_by_global_norm(grads, grad_clip) if grad_clip else grads
+
+    if name == "sgd":
+        def init(params):
+            return {}
+
+        def update(grads, state, params, lr):
+            grads = maybe_clip(grads)
+            new = jax.tree.map(
+                lambda p, g: p - (lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new, state
+        return Optimizer("sgd", init, update)
+
+    if name == "momentum":
+        def init(params):
+            return {"v": _tree_zeros_like(params)}
+
+        def update(grads, state, params, lr):
+            grads = maybe_clip(grads)
+            v = jax.tree.map(lambda v, g: momentum * v + g.astype(jnp.float32),
+                             state["v"], grads)
+            new = jax.tree.map(lambda p, v: p - (lr * v).astype(p.dtype), params, v)
+            return new, {"v": v}
+        return Optimizer("momentum", init, update)
+
+    if name == "adamw":
+        def init(params):
+            return {"m": _tree_zeros_like(params), "v": _tree_zeros_like(params),
+                    "t": jnp.zeros((), jnp.int32)}
+
+        def update(grads, state, params, lr):
+            grads = maybe_clip(grads)
+            t = state["t"] + 1
+            m = jax.tree.map(lambda m, g: beta1 * m + (1 - beta1) * g.astype(jnp.float32),
+                             state["m"], grads)
+            v = jax.tree.map(lambda v, g: beta2 * v + (1 - beta2)
+                             * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+            bc1 = 1 - beta1**t.astype(jnp.float32)
+            bc2 = 1 - beta2**t.astype(jnp.float32)
+
+            def upd(p, m, v):
+                step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                if weight_decay and p.ndim >= 2:  # decay matrices only
+                    step = step + lr * weight_decay * p.astype(jnp.float32)
+                return p - step.astype(p.dtype)
+
+            return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+        return Optimizer("adamw", init, update)
+
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant_lr", "cosine_lr", "warmup_cosine"]
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_lr(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_lr(lr, max(total_steps - warmup, 1), final_frac)
+
+    def f(step):
+        w = jnp.minimum(step.astype(jnp.float32) / max(warmup, 1), 1.0)
+        return w * cos(jnp.maximum(step - warmup, 0))
+    return f

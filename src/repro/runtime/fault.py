@@ -1,0 +1,100 @@
+"""Fault tolerance: failure detection hook + elastic topology rebuild.
+
+D-PSGD is naturally elastic: the only global object is W. On a failure event
+the controller (1) drops the dead node(s) from the node set, (2) re-solves the
+paper's Eq. 8 on the survivor set — wireless mode re-runs Algorithm 2 on the
+shrunken capacity matrix; pod mode re-runs the density controller on the new
+node grid — and (3) restarts from the last checkpoint with
+``checkpoint.reshape_nodes`` (survivor rows kept, replacements warm-started at
+the survivor mean). Because every solver is deterministic, all survivors
+compute identical new plans with no extra coordination — the same property the
+paper uses in §III-C.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from ..core import rate_opt
+from ..core.density_controller import PlanChoice, choose_plan
+from ..core.comm_model import LinkModel
+
+__all__ = ["FailureEvent", "ElasticController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    step: int
+    failed_nodes: tuple[int, ...]
+    detected_at: float = dataclasses.field(default_factory=time.time)
+
+
+@dataclasses.dataclass
+class ElasticController:
+    """Tracks the live node set and recomputes mixing plans on failures."""
+
+    n_nodes: int
+    lambda_target: float
+    mode: str = "pod"                       # "pod" | "wireless"
+    # pod mode
+    axis_names: Sequence[str] = ("data",)
+    bytes_per_rank: float = 1e9
+    link: LinkModel = dataclasses.field(default_factory=LinkModel)
+    # wireless mode
+    capacity: Optional[np.ndarray] = None   # (n, n) channel-capacity matrix
+    model_bits: float = 0.0
+    heartbeat_timeout_s: float = 30.0
+
+    def __post_init__(self):
+        self.live = list(range(self.n_nodes))
+        self.events: list[FailureEvent] = []
+        self._last_heartbeat = {i: time.time() for i in self.live}
+
+    # -- detection -----------------------------------------------------------
+    def heartbeat(self, node: int, at: Optional[float] = None):
+        self._last_heartbeat[node] = at if at is not None else time.time()
+
+    def detect(self, step: int, now: Optional[float] = None) -> Optional[FailureEvent]:
+        now = now if now is not None else time.time()
+        dead = tuple(i for i in self.live
+                     if now - self._last_heartbeat[i] > self.heartbeat_timeout_s)
+        if not dead:
+            return None
+        return self.fail(step, dead)
+
+    def fail(self, step: int, nodes: Sequence[int]) -> FailureEvent:
+        ev = FailureEvent(step, tuple(nodes))
+        self.events.append(ev)
+        self.live = [i for i in self.live if i not in ev.failed_nodes]
+        return ev
+
+    # -- recovery ------------------------------------------------------------
+    def survivors(self) -> list[int]:
+        return list(self.live)
+
+    def replan(self):
+        """Deterministic re-solve of Eq. 8 on the survivor set."""
+        n = len(self.live)
+        if n == 0:
+            raise RuntimeError("all nodes failed")
+        if self.mode == "wireless":
+            assert self.capacity is not None
+            cap = self.capacity[np.ix_(self.live, self.live)]
+            return rate_opt.solve(cap, self.model_bits, self.lambda_target)
+        # pod mode: survivors re-form a 1-D replica ring of size n
+        return choose_plan(self.axis_names, (n,), self.lambda_target,
+                           self.bytes_per_rank, self.link)
+
+    def recover(self, state, reshape_nodes: Callable, n_new: Optional[int] = None):
+        """Elastic state surgery + fresh plan. ``reshape_nodes`` is
+        checkpoint.reshape_nodes (injected to avoid a cycle)."""
+        n_new = n_new if n_new is not None else len(self.live)
+        new_state = reshape_nodes(state, self.live, n_new)
+        plan = self.replan()
+        self.live = list(range(n_new))
+        self.n_nodes = n_new
+        self._last_heartbeat = {i: time.time() for i in self.live}
+        return new_state, plan

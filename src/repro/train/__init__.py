@@ -1,0 +1,5 @@
+from . import shardings, step
+from .step import init_train_state, make_train_step, reshape_batch_for_nodes
+
+__all__ = ["shardings", "step", "init_train_state", "make_train_step",
+           "reshape_batch_for_nodes"]

@@ -1,0 +1,150 @@
+"""Post-SPMD HLO analysis: collective ops and their byte counts.
+
+``compiled.as_text()`` is the partitioned per-device module, so every shape
+below is a per-device shard — exactly the per-chip quantities the roofline's
+collective term needs. For each collective kind we record the summed RESULT
+bytes and a modeled per-chip **link traffic**:
+
+  collective-permute: result bytes        (one hop, send+recv overlap)
+  all-gather:         result * (g-1)/g    (ring AG receives all but own shard)
+  reduce-scatter:     operand ~= result*g, traffic result * (g-1)
+  all-reduce:         2 * result * (g-1)/g (ring RS+AG)
+  all-to-all:         result * (g-1)/g
+
+where g = replica-group size parsed per op (falls back to ``default_group``).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+__all__ = ["collective_summary", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<shapes>\([^)]*\)|[^=(]+?)\s*"
+    r"(?P<op>all-reduce-start|all-gather-start|collective-permute-start|"
+    r"all-to-all-start|reduce-scatter-start|"
+    r"all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> Optional[int]:
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1)
+        return len([x for x in first.split(",") if x.strip() != ""])
+    # iota form: replica_groups=[n_groups,group_size]<=[...]
+    m = _GROUPS_BRACKET_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return None
+
+
+def _iter_collectives(hlo_text: str, default_group: int):
+    """Yield (op, result_bytes, link_bytes, loop_depth) per UNIQUE collective.
+
+    Dedup by the HLO op name (clone computations repeat definitions).
+    ``loop_depth`` counts "/while/" segments in the op metadata path: 0 =
+    top-level (executes once per step), 1 = inside one loop (e.g. the
+    microbatch scan), 2 = nested (e.g. layer scan inside microbatch scan).
+    Loop bodies execute trip-count times but appear once in the text.
+    For async -start ops the tuple shape holds (operand, result); we take the
+    result entry (the larger, matching the sync op's result convention)."""
+    seen: set[str] = set()
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name = m.group("name")
+        if name in seen:
+            continue
+        seen.add(name)
+        op = m.group("op").replace("-start", "")
+        shapes = m.group("shapes")
+        rb = _shape_bytes(shapes)
+        if m.group("op").endswith("-start") and shapes.startswith("("):
+            rb = rb // 2  # tuple carries operand + result; keep one
+        if rb == 0:
+            continue
+        g = _group_size(line) or default_group
+        g = max(g, 2)
+        if op == "collective-permute":
+            link = float(rb)
+        elif op == "all-gather":
+            link = rb * (g - 1) / g
+        elif op == "reduce-scatter":
+            link = rb * (g - 1)
+        elif op == "all-reduce":
+            link = 2.0 * rb * (g - 1) / g
+        else:  # all-to-all
+            link = rb * (g - 1) / g
+        yield op, rb, link, line.count("/while/")
+
+
+def _empty_bucket() -> dict:
+    return {op: {"count": 0, "result_bytes": 0, "link_bytes": 0.0}
+            for op in _OPS}
+
+
+def collective_summary_split(hlo_text: str, default_group: int = 2) -> dict:
+    """Collective summary bucketed by loop depth: ``toplevel`` (x1 per step),
+    ``loop_depth_1`` (x outer trip count), ``loop_depth_2`` (x outer x inner).
+    benchmarks/roofline.py applies the known trip counts (microbatch, pattern
+    repeats). ``in_loop`` (= depth>=1 sum) is kept for compatibility."""
+    buckets = {"toplevel": _empty_bucket(), "loop_depth_1": _empty_bucket(),
+               "loop_depth_2": _empty_bucket(), "in_loop": _empty_bucket()}
+    for op, rb, link, depth in _iter_collectives(hlo_text, default_group):
+        keys = ["toplevel"] if depth == 0 else (
+            ["loop_depth_1", "in_loop"] if depth == 1 else
+            ["loop_depth_2", "in_loop"])
+        for key in keys:
+            b = buckets[key][op]
+            b["count"] += 1
+            b["result_bytes"] += rb
+            b["link_bytes"] += link
+    for k in buckets:
+        buckets[k]["total_link_bytes"] = sum(
+            v["link_bytes"] for v in buckets[k].values() if isinstance(v, dict))
+        buckets[k]["total_count"] = sum(
+            v["count"] for v in buckets[k].values() if isinstance(v, dict))
+    return buckets
+
+
+def collective_summary(hlo_text: str, default_group: int = 2) -> dict:
+    """Per-kind {count, result_bytes, link_bytes} + totals (all buckets)."""
+    out: dict = {op: {"count": 0, "result_bytes": 0, "link_bytes": 0.0}
+                 for op in _OPS}
+    for op, rb, link, _ in _iter_collectives(hlo_text, default_group):
+        out[op]["count"] += 1
+        out[op]["result_bytes"] += rb
+        out[op]["link_bytes"] += link
+    out["total_link_bytes"] = sum(v["link_bytes"] for v in out.values()
+                                  if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for v in out.values()
+                             if isinstance(v, dict))
+    return out

@@ -1,0 +1,88 @@
+"""Pytree <-> flat-buffer utilities for fused gossip collectives.
+
+``tree_to_buffers`` groups leaves by dtype and concatenates each group into a
+single 1-D buffer, so one gossip round issues one collective per dtype-group
+instead of one per tensor (see EXPERIMENTS.md §Perf: fused flat-buffer
+gossip). ``buffers_to_tree`` inverts exactly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["tree_to_buffers", "buffers_to_tree", "tree_bytes", "tree_param_count"]
+
+
+def _group_key(x: jax.Array) -> str:
+    return str(x.dtype)
+
+
+def tree_to_buffers(tree: PyTree) -> tuple[dict[str, jax.Array], Any]:
+    """Returns ({dtype_name: 1-D buffer}, spec) with deterministic leaf order."""
+    leaves, treedef = jax.tree.flatten(tree)
+    groups: dict[str, list[int]] = {}
+    for idx, leaf in enumerate(leaves):
+        groups.setdefault(_group_key(leaf), []).append(idx)
+    buffers = {
+        key: jnp.concatenate([leaves[i].reshape(-1) for i in idxs])
+        for key, idxs in groups.items()
+    }
+    spec = (treedef, [(leaf.shape, str(leaf.dtype)) for leaf in leaves], groups)
+    return buffers, spec
+
+
+def buffers_to_tree(buffers: dict[str, jax.Array], spec: Any) -> PyTree:
+    treedef, shapes_dtypes, groups = spec
+    leaves: list[Any] = [None] * len(shapes_dtypes)
+    for key, idxs in groups.items():
+        buf = buffers[key]
+        off = 0
+        for i in idxs:
+            shape, _ = shapes_dtypes[i]
+            size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            leaves[i] = jax.lax.dynamic_slice_in_dim(buf, off, size).reshape(shape)
+            off += size
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def tree_to_node_buffers(tree: PyTree) -> tuple[dict[str, jax.Array], Any]:
+    """Like ``tree_to_buffers`` but leaves carry a leading node axis that is
+    preserved: each group becomes one (n_nodes, total) buffer."""
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[0]
+    groups: dict[str, list[int]] = {}
+    for idx, leaf in enumerate(leaves):
+        groups.setdefault(_group_key(leaf), []).append(idx)
+    buffers = {
+        key: jnp.concatenate([leaves[i].reshape(n, -1) for i in idxs], axis=1)
+        for key, idxs in groups.items()
+    }
+    spec = (treedef, [(leaf.shape, str(leaf.dtype)) for leaf in leaves], groups)
+    return buffers, spec
+
+
+def node_buffers_to_tree(buffers: dict[str, jax.Array], spec: Any) -> PyTree:
+    treedef, shapes_dtypes, groups = spec
+    leaves: list[Any] = [None] * len(shapes_dtypes)
+    for key, idxs in groups.items():
+        buf = buffers[key]
+        off = 0
+        for i in idxs:
+            shape, _ = shapes_dtypes[i]
+            size = int(np.prod(shape[1:], dtype=np.int64)) if len(shape) > 1 else 1
+            leaves[i] = jax.lax.dynamic_slice_in_dim(buf, off, size, axis=1).reshape(shape)
+            off += size
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def tree_param_count(tree: PyTree) -> int:
+    return sum(l.size for l in jax.tree.leaves(tree))

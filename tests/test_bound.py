@@ -1,0 +1,49 @@
+import numpy as np
+import pytest
+
+from repro.core import bound
+
+
+def test_fig2_magnitudes():
+    """Numbers the paper reads off Fig. 2 (L=1, sigma2=1, eta=.01, F1=1)."""
+    # (a) K=1: the 2(F1-Finf)/(eta K) term dominates at 200
+    p = bound.BoundParams(n=6)
+    assert bound.sync_term(p, 1) == pytest.approx(200 + 0.01 / 6, rel=1e-6)
+    # (c) n=6, K->inf: bound at lambda<=0.98 stays at the 1e-2 order
+    b = bound.dpsgd_bound(p, 0.98, np.inf)
+    assert 1e-3 < b < 2e-2
+    # (d) n=20: threshold where network term matches sync term ~ 0.82
+    p20 = bound.BoundParams(n=20)
+    thr = bound.lambda_threshold(p20, np.inf)
+    assert 0.75 < thr < 0.88  # paper eyeballs ~0.84
+
+
+def test_network_term_monotone_in_lambda():
+    p = bound.BoundParams()
+    lams = np.linspace(0, 0.99, 50)
+    net = bound.network_term(p, lams)
+    assert np.all(np.diff(net) > 0)
+    assert net[0] == pytest.approx(p.eta**2)  # (1+0)/(1-0) = 1
+
+
+def test_bound_decreases_with_k_and_n():
+    p = bound.BoundParams(n=6)
+    assert bound.dpsgd_bound(p, 0.5, 10) > bound.dpsgd_bound(p, 0.5, 1000)
+    p2 = bound.BoundParams(n=60)
+    assert bound.sync_term(p2, np.inf) < bound.sync_term(p, np.inf)
+
+
+def test_eq6_feasibility():
+    assert bound.lr_feasible(0.01, 1.0, 0.8)
+    assert not bound.lr_feasible(0.01, 1.0, 0.9999)
+    assert not bound.lr_feasible(0.01, 1.0, 1.0)
+    lam_max = bound.max_feasible_lambda(0.01, 1.0)
+    assert bound.lr_feasible(0.01, 1.0, lam_max - 1e-9)
+    assert not bound.lr_feasible(0.01, 1.0, lam_max + 1e-6)
+
+
+def test_threshold_closed_form_consistent():
+    p = bound.BoundParams(n=20)
+    thr = bound.lambda_threshold(p, np.inf, ratio=1.0)
+    net = bound.network_term(p, thr)
+    assert net == pytest.approx(bound.sync_term(p, np.inf), rel=1e-9)

@@ -1,0 +1,48 @@
+import numpy as np
+import pytest
+
+from repro.core import channel
+
+
+def test_received_power_monotone_decreasing():
+    p = channel.ChannelParams(path_loss_exp=3.0)
+    d = np.array([1.0, 10.0, 100.0])
+    pw = channel.received_power_dbm(d, p)
+    assert pw[0] > pw[1] > pw[2]
+    # log-distance: -10*eps dB per decade
+    assert pw[0] - pw[1] == pytest.approx(30.0)
+
+
+def test_capacity_matches_paper_constants():
+    # paper Fig. 3: P_Tx = 0 dBm, B = 20 MHz, N0 = -172 dBm/Hz
+    p = channel.ChannelParams(path_loss_exp=5.0)
+    c100 = channel.capacity_bps(np.array(100.0), p)
+    # gamma = 10**((0 - 500/5... ) (manual): P(100) = -100 dBm, SNR lin = 10^7.2
+    gamma = 10 ** ((0 - 10 * 5 * 2 - (-172.0)) / 10)
+    expected = 20e6 * np.log2(1 + gamma / 20e6)
+    assert c100 == pytest.approx(expected)
+    assert 1e6 < c100 < 100e6  # tens of Mbps: sane Wi-Fi-scale number
+
+
+def test_capacity_matrix_diag_inf_and_symmetry():
+    pos = channel.random_placement(6, 200.0, seed=1)
+    c = channel.capacity_matrix(pos, channel.ChannelParams())
+    assert np.all(np.isinf(np.diag(c)))
+    off = ~np.eye(6, dtype=bool)
+    assert np.allclose(c[off], c.T[off])
+    assert np.all(c[off] > 0)
+
+
+def test_fading_margin_reduces_capacity():
+    pos = channel.random_placement(5, 200.0, seed=2)
+    c0 = channel.capacity_matrix(pos, channel.ChannelParams())
+    c1 = channel.capacity_matrix(pos, channel.ChannelParams(fading_margin_bps=1e6))
+    off = ~np.eye(5, dtype=bool)
+    assert np.all(c1[off] <= c0[off])
+
+
+def test_placement_min_separation():
+    pos = channel.random_placement(10, 200.0, seed=3, min_sep_m=5.0)
+    d = channel.pairwise_distances(pos)
+    off = ~np.eye(10, dtype=bool)
+    assert d[off].min() >= 5.0

@@ -1,0 +1,72 @@
+import numpy as np
+import pytest
+
+from repro.core import channel
+from repro.core.bound import BoundParams
+from repro.runtime.fault import ElasticController
+from repro.runtime.straggler import StragglerPolicy, straggler_penalty
+
+
+def test_heartbeat_detection():
+    ec = ElasticController(4, 0.8, mode="pod", heartbeat_timeout_s=10.0)
+    t0 = 1000.0
+    for i in range(4):
+        ec.heartbeat(i, at=t0)
+    assert ec.detect(step=1, now=t0 + 5) is None
+    ec.heartbeat(0, at=t0 + 20)
+    ec.heartbeat(1, at=t0 + 20)
+    ec.heartbeat(3, at=t0 + 20)
+    ev = ec.detect(step=2, now=t0 + 21)
+    assert ev is not None and ev.failed_nodes == (2,)
+    assert ec.survivors() == [0, 1, 3]
+
+
+def test_pod_replan_after_failure():
+    ec = ElasticController(8, 0.95, mode="pod", axis_names=("data",),
+                           bytes_per_rank=1e9)
+    ec.fail(10, [3, 5])
+    choice = ec.replan()
+    assert choice.plan.n_nodes == 6
+    assert choice.lam <= 0.95 + 1e-9
+
+
+def test_wireless_replan_after_failure():
+    pos = channel.random_placement(6, 200.0, seed=0)
+    cap = channel.capacity_matrix(pos, channel.ChannelParams(path_loss_exp=4.0))
+    ec = ElasticController(6, 0.8, mode="wireless", capacity=cap,
+                           model_bits=698880.0)
+    ec.fail(5, [2])
+    sol = ec.replan()
+    assert sol.rates_bps.shape == (5,)
+    assert sol.feasible
+
+
+def test_recover_roundtrip():
+    from repro.checkpoint.ckpt import reshape_nodes
+    import jax, jax.numpy as jnp
+    ec = ElasticController(4, 0.9, mode="pod", axis_names=("data",),
+                           bytes_per_rank=1e6)
+    state = {"params": {"w": jnp.arange(12.0).reshape(4, 3)}}
+    ec.fail(1, [1])
+    new_state, plan = ec.recover(state, reshape_nodes, n_new=4)
+    assert new_state["params"]["w"].shape == (4, 3)
+    assert ec.n_nodes == 4 and len(ec.live) == 4
+
+
+def test_all_nodes_dead_raises():
+    ec = ElasticController(2, 0.9, mode="pod")
+    ec.fail(0, [0, 1])
+    with pytest.raises(RuntimeError):
+        ec.replan()
+
+
+def test_straggler_policy_monotone():
+    pol = StragglerPolicy(BoundParams(n=8), lam=0.5)
+    assert pol.effective_bound(2) > pol.effective_bound(1)
+    h = pol.choose_h()
+    assert 1 <= h <= pol.max_h
+
+
+def test_gossip_beats_allreduce_under_stragglers():
+    g, ar = straggler_penalty(degree=2, n=64, slow_prob=0.05, slow_factor=5.0)
+    assert g < ar  # gossip waits on neighbors, all-reduce on the whole fleet

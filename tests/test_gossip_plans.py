@@ -1,0 +1,96 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RunConfig
+from repro.core import gossip, topology
+from repro.core.comm_model import LinkModel
+from repro.core.density_controller import candidate_plans, choose_plan, evaluate_plan
+from repro.train.step import _mix_leaf, mix_params, roll_from_neighbor
+
+
+@pytest.mark.parametrize("maker,args", [
+    (gossip.ring_plan, (("data",), (8,), 1)),
+    (gossip.ring_plan, (("data",), (8,), 2)),
+    (gossip.torus_plan, (("pod", "data"), (2, 4))),
+    (gossip.hypercube_plan, (("data",), (8,))),
+])
+def test_plan_w_is_valid_mixing_matrix(maker, args):
+    plan = maker(*args)
+    w = gossip.plan_w(plan)
+    assert np.allclose(w.sum(1), 1.0)
+    assert np.allclose(w, w.T)  # regular graphs + uniform weights => symmetric
+    lam = topology.spectral_lambda(w)
+    assert 0 <= lam < 1.0
+
+
+def test_roll_mix_equals_dense_w():
+    """The roll-based lowering must realise exactly plan_w (all round kinds)."""
+    for plan in (gossip.ring_plan(("d",), (8,), 2),
+                 gossip.torus_plan(("p", "d"), (2, 4)),
+                 gossip.hypercube_plan(("d",), (8,))):
+        x = jax.random.normal(jax.random.key(0), (plan.n_nodes, 5))
+        got = np.asarray(_mix_leaf(x, plan))
+        want = gossip.plan_w(plan) @ np.asarray(x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_roll_from_neighbor_permutation():
+    plan = gossip.hypercube_plan(("d",), (8,))
+    x = jnp.arange(8.0)[:, None]
+    for r in plan.rounds:
+        got = np.asarray(roll_from_neighbor(x, plan, r))[:, 0]
+        want = np.empty(8)
+        for src, dst in r.perm(plan.node_shape):
+            want[dst] = src
+        np.testing.assert_allclose(got, want)
+
+
+def test_allreduce_plan_mixes_to_mean():
+    plan = gossip.allreduce_plan(("d",), (8,))
+    x = jax.random.normal(jax.random.key(1), (8, 3))
+    got = np.asarray(_mix_leaf(x, plan))
+    np.testing.assert_allclose(got, np.broadcast_to(np.asarray(x).mean(0), got.shape),
+                               rtol=1e-6)
+
+
+def test_mix_params_preserves_mean_tree():
+    plan = gossip.ring_plan(("d",), (8,), 1)
+    params = {"a": jax.random.normal(jax.random.key(2), (8, 4, 3)),
+              "b": {"w": jax.random.normal(jax.random.key(3), (8, 5))}}
+    mixed, _ = mix_params(params, None, plan, RunConfig(compression="none"))
+    for k, leaf, mleaf in (("a", params["a"], mixed["a"]),
+                           ("b", params["b"]["w"], mixed["b"]["w"])):
+        np.testing.assert_allclose(np.asarray(mleaf.mean(0)),
+                                   np.asarray(leaf.mean(0)), rtol=1e-5, atol=1e-6)
+
+
+def test_controller_dci_penalty_prefers_sparse_cross_pod():
+    """With expensive pod links and a loose lambda target, the controller must
+    pick something cheaper than all-reduce (the paper's core effect)."""
+    link = LinkModel(dci_penalty=8.0)
+    ch = choose_plan(("pod", "data"), (2, 16), 0.97, 1e9, link)
+    ar = [t for name, lam, t in ch.alternatives if name == "allreduce"][0]
+    assert ch.feasible
+    assert ch.t_com_s <= ar
+    assert ch.plan.name != "allreduce"
+
+
+def test_controller_respects_lambda_and_eq6():
+    ch = choose_plan(("data",), (16,), 0.5, 1e9, eta=0.01)
+    assert ch.lam <= 0.5 + 1e-9
+
+
+def test_controller_infeasible_falls_to_densest():
+    ch = choose_plan(("data",), (16,), -1.0, 1e9)  # impossible target
+    assert not ch.feasible
+    # fallback = the minimum-lambda (densest) candidate
+    assert ch.lam <= min(lam for _, lam, _ in ch.alternatives) + 1e-12
+
+
+def test_evaluate_plan_time_scales_with_degree():
+    plans = {p.name: p for p in candidate_plans(("data",), (16,))}
+    _, t1 = evaluate_plan(plans["ring-1"], 1e9, LinkModel())
+    _, t3 = evaluate_plan(plans["ring-3"], 1e9, LinkModel())
+    assert t3 > t1

@@ -1,0 +1,107 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _err(a, b):
+    return float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("k", [1, 3, 5])
+@pytest.mark.parametrize("n", [100, 8192, 10000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gossip_mix(k, n, dtype):
+    bufs = jax.random.normal(jax.random.key(0), (k, n)).astype(dtype)
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(1), (k,)))
+    got = ops.gossip_mix(bufs, w)
+    want = ref.gossip_mix_ref(bufs, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    assert _err(got, want) < tol
+    assert got.dtype == dtype
+
+
+@pytest.mark.parametrize("s,hq,hkv,d", [
+    (64, 4, 4, 32),    # MHA
+    (80, 4, 2, 32),    # GQA, ragged seq
+    (96, 8, 1, 16),    # MQA
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 32), (False, 0)])
+def test_flash_attention(s, hq, hkv, d, causal, window):
+    q = jax.random.normal(jax.random.key(0), (2, s, hq, d))
+    k = jax.random.normal(jax.random.key(1), (2, s, hkv, d))
+    v = jax.random.normal(jax.random.key(2), (2, s, hkv, d))
+    got = ops.flash_attention_gqa(q, k, v, causal=causal, window=window,
+                                  bq=32, bk=32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    assert _err(got, want) < 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jax.random.normal(jax.random.key(0), (1, 64, 2, 32)).astype(dtype)
+    k = jax.random.normal(jax.random.key(1), (1, 64, 2, 32)).astype(dtype)
+    v = jax.random.normal(jax.random.key(2), (1, 64, 2, 32)).astype(dtype)
+    got = ops.flash_attention_gqa(q, k, v, bq=32, bk=32)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    assert _err(got, want) < tol
+    assert got.dtype == dtype
+
+
+@pytest.mark.parametrize("s,h,d,chunk", [(40, 2, 16, 16), (128, 4, 32, 32),
+                                         (33, 1, 8, 16)])
+def test_rwkv6(s, h, d, chunk):
+    b = 2
+    r = jax.random.normal(jax.random.key(0), (b, s, h, d))
+    k = jax.random.normal(jax.random.key(1), (b, s, h, d))
+    v = jax.random.normal(jax.random.key(2), (b, s, h, d))
+    w = jnp.exp(-jnp.exp(jax.random.normal(jax.random.key(3), (b, s, h, d)) * 0.5))
+    u = jax.random.normal(jax.random.key(4), (h, d)) * 0.1
+    y1, s1 = ops.rwkv6(r, k, v, w, u, chunk=chunk)
+    y2, s2 = ref.rwkv6_ref(r, k, v, w, u)
+    assert _err(y1, y2) < 5e-4
+    assert _err(s1, s2) < 5e-4
+
+
+@pytest.mark.parametrize("s,d", [(64, 128), (100, 256), (32, 64)])
+def test_rglru(s, d):
+    b = 2
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.key(0), (b, s, d)))
+    binp = jax.random.normal(jax.random.key(1), (b, s, d))
+    h0 = jax.random.normal(jax.random.key(2), (b, d))
+    got = ops.rglru(a, binp, h0, chunk=32)
+    want = ref.rglru_ref(a, binp, h0)
+    assert _err(got, want) < 1e-4
+
+
+def test_rglru_matches_model_recurrence():
+    """Kernel vs the model's associative-scan lowering (two independent
+    implementations of the same recurrence)."""
+    from repro.models.rglru import linear_recurrence
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.key(5), (2, 48, 128)))
+    b = jax.random.normal(jax.random.key(6), (2, 48, 128))
+    h0 = jax.random.normal(jax.random.key(7), (2, 128))
+    got = ops.rglru(a, b, h0, chunk=16)
+    want = linear_recurrence(a, b, h0)
+    assert _err(got, want) < 1e-4
+
+
+@pytest.mark.parametrize("r,c", [(8, 512), (5, 700), (16, 256)])
+def test_quantize_roundtrip(r, c):
+    x = jax.random.normal(jax.random.key(0), (r, c)) * 7
+    q, s = ops.quantize_int8(x)
+    deq = ops.dequantize_int8(q, s)
+    # error bounded by half an int8 step of the per-block scale
+    assert _err(deq, x) <= float(jnp.abs(x).max()) / 127.0 * 0.51 + 1e-6
+
+
+def test_quantize_matches_ref_exactly():
+    x = jax.random.normal(jax.random.key(1), (8, 512)) * 3
+    q, s = ops.quantize_int8(x)
+    qr, sr = ref.quantize_int8_ref(x)
+    assert jnp.all(q == qr)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)

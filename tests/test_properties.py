@@ -1,0 +1,110 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channel, gossip, rate_opt, topology
+from repro.core.bound import BoundParams, dpsgd_bound
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@st.composite
+def placements(draw, n_min=3, n_max=7):
+    n = draw(st.integers(n_min, n_max))
+    seed = draw(st.integers(0, 10_000))
+    eps = draw(st.floats(2.0, 6.0))
+    pos = channel.random_placement(n, 200.0, seed=seed)
+    cap = channel.capacity_matrix(pos, channel.ChannelParams(path_loss_exp=eps))
+    return cap
+
+
+@SET
+@given(placements(), st.floats(1e5, 1e8))
+def test_w_always_row_stochastic_and_lambda_in_range(cap, rate):
+    n = cap.shape[0]
+    a = topology.adjacency_from_rates(cap, np.full(n, rate))
+    w = topology.paper_w(a)
+    assert np.allclose(w.sum(axis=1), 1.0)
+    lam = topology.spectral_lambda(w)
+    assert -1e-9 <= lam <= 1.0 + 1e-9
+
+
+@SET
+@given(placements())
+def test_nested_rates_lambda_monotone(cap):
+    """Lowering a common rate never makes the topology sparser: the
+    adjacency is nested, and for the k-nearest family lambda is
+    non-increasing as density grows."""
+    n = cap.shape[0]
+    finite = np.sort(np.unique(cap[np.isfinite(cap)]))
+    a_dense = topology.adjacency_from_rates(cap, np.full(n, finite[0]))
+    a_sparse = topology.adjacency_from_rates(cap, np.full(n, finite[-1]))
+    assert (a_dense >= a_sparse).all()
+
+
+@SET
+@given(placements(n_min=4, n_max=6), st.floats(0.05, 0.95))
+def test_solver_feasible_solutions_respect_target(cap, lam_t):
+    sol = rate_opt.solve(cap, 698880.0, lam_t)
+    if sol.feasible:
+        assert sol.lam <= lam_t + 1e-9
+        assert np.isfinite(sol.t_com_s)
+        w = sol.w
+        assert np.allclose(w.sum(1), 1.0)
+
+
+@SET
+@given(placements(n_min=4, n_max=5), st.floats(0.2, 0.9))
+def test_heuristics_never_beat_bruteforce(cap, lam_t):
+    best = rate_opt.solve_bruteforce(cap, 698880.0, lam_t)
+    for m in ("greedy", "k_nearest", "common_rate"):
+        sol = rate_opt.solve(cap, 698880.0, lam_t, method=m)
+        if sol.feasible and best.feasible:
+            assert sol.t_com_s >= best.t_com_s - 1e-12
+
+
+@SET
+@given(st.integers(2, 5), st.integers(1, 4),
+       st.integers(0, 1000), st.integers(2, 16))
+def test_gossip_plans_preserve_mean_and_contract(logn, k, seed, dim):
+    import jax
+    from repro.train.step import _mix_leaf
+    n = 2**logn
+    k = min(k, max(1, n // 2 - 1)) or 1
+    plan = gossip.ring_plan(("d",), (n,), k)
+    x = jax.random.normal(jax.random.key(seed), (n, dim))
+    mixed = np.asarray(_mix_leaf(x, plan))
+    xs = np.asarray(x)
+    np.testing.assert_allclose(mixed.mean(0), xs.mean(0), rtol=1e-4, atol=1e-5)
+    # disagreement never grows
+    assert np.linalg.norm(mixed - mixed.mean(0)) <= \
+        np.linalg.norm(xs - xs.mean(0)) + 1e-5
+
+
+@SET
+@given(st.floats(0.0, 0.99), st.floats(0.0, 0.99))
+def test_bound_monotone_in_lambda(l1, l2):
+    p = BoundParams(n=8)
+    lo, hi = min(l1, l2), max(l1, l2)
+    assert dpsgd_bound(p, lo, 100) <= dpsgd_bound(p, hi, 100) + 1e-12
+
+
+@SET
+@given(st.integers(1, 64), st.integers(1, 2048), st.integers(0, 100))
+def test_quantize_roundtrip_error_bounded(rows, cols, seed):
+    import jax, jax.numpy as jnp
+    from repro.train.step import _quantize_rowwise_int8
+    x = jax.random.normal(jax.random.key(seed), (rows, cols)) * 10
+    q, s = _quantize_rowwise_int8(x.astype(jnp.float32))
+    deq = np.asarray(q.astype(jnp.float32) * s)
+    per_row_bound = np.abs(np.asarray(x)).max(axis=-1, keepdims=True) / 127.0
+    assert np.all(np.abs(deq - np.asarray(x)) <= per_row_bound * 0.5 + 1e-6)
+
+
+@SET
+@given(st.integers(3, 20))
+def test_comm_time_additive_in_nodes(n):
+    from repro.core.comm_model import tdm_time_s
+    rates = np.full(n, 1e6)
+    assert tdm_time_s(1e6, rates) == pytest.approx(n * 1.0)

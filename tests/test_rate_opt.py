@@ -1,0 +1,61 @@
+import numpy as np
+import pytest
+
+from repro.core import channel, comm_model, rate_opt
+
+M_BITS = 698_880.0  # paper CNN model size
+
+
+def _cap(n=5, seed=0, eps=4.0):
+    pos = channel.random_placement(n, 200.0, seed=seed)
+    return channel.capacity_matrix(pos, channel.ChannelParams(path_loss_exp=eps))
+
+
+def test_bruteforce_respects_constraint_and_beats_heuristics():
+    c = _cap()
+    for lam_t in (0.3, 0.6, 0.9):
+        best = rate_opt.solve_bruteforce(c, M_BITS, lam_t)
+        assert best.feasible and best.lam <= lam_t + 1e-9
+        for solver in (rate_opt.solve_greedy, rate_opt.solve_k_nearest,
+                       rate_opt.solve_common_rate):
+            sol = solver(c, M_BITS, lam_t)
+            if sol.feasible:
+                assert sol.t_com_s >= best.t_com_s - 1e-12
+                assert sol.lam <= lam_t + 1e-9
+
+
+def test_tighter_lambda_costs_more_time():
+    """The paper's core tradeoff: denser (smaller lambda_target) => slower."""
+    c = _cap(6, seed=3, eps=5.0)
+    t_loose = rate_opt.solve_bruteforce(c, M_BITS, 0.8).t_com_s
+    t_tight = rate_opt.solve_bruteforce(c, M_BITS, 0.1).t_com_s
+    assert t_tight >= t_loose
+    assert t_tight / t_loose > 1.5  # large-eps placements show big speedups
+
+
+def test_tdm_time():
+    assert comm_model.tdm_time_s(100.0, np.array([10.0, 20.0])) == \
+        pytest.approx(100 / 10 + 100 / 20)
+    assert comm_model.tdm_time_s(1.0, np.array([0.0, 1.0])) == np.inf
+
+
+def test_deterministic_across_nodes():
+    """Every node solving Eq. 8 independently gets the same R (paper §III-C)."""
+    c = _cap(5, seed=7)
+    sols = [rate_opt.solve(c, M_BITS, 0.5) for _ in range(3)]
+    for s in sols[1:]:
+        assert np.array_equal(s.rates_bps, sols[0].rates_bps)
+
+
+def test_auto_dispatch_large_n():
+    c = _cap(10, seed=1)
+    sol = rate_opt.solve(c, M_BITS, 0.7, method="auto")
+    assert sol.feasible
+    with pytest.raises(ValueError):
+        rate_opt.solve_bruteforce(c, M_BITS, 0.7)  # n too large for brute force
+
+
+def test_infeasible_target_returns_densest():
+    c = _cap(4, seed=2, eps=6.0)
+    sol = rate_opt.solve_bruteforce(c, M_BITS, -1.0)  # impossible target
+    assert not sol.feasible  # falls back to densest attempt, flagged infeasible

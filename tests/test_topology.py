@@ -1,0 +1,70 @@
+import numpy as np
+import pytest
+
+from repro.core import channel, topology
+
+
+def _cap(n=6, seed=0, eps=4.0):
+    pos = channel.random_placement(n, 200.0, seed=seed)
+    return channel.capacity_matrix(pos, channel.ChannelParams(path_loss_exp=eps))
+
+
+def test_paper_w_row_stochastic():
+    c = _cap()
+    a = topology.adjacency_from_rates(c, np.full(6, 1e6))
+    w = topology.paper_w(a)
+    assert np.allclose(w.sum(axis=1), 1.0)
+    assert np.all(np.diag(a) == 1)
+
+
+def test_lambda_extremes():
+    # fully connected -> lambda 0; disconnected -> lambda 1
+    assert topology.spectral_lambda(topology.fully_connected_w(8)) == pytest.approx(0.0, abs=1e-10)
+    w_disconnected = np.eye(6)
+    assert topology.spectral_lambda(w_disconnected) == pytest.approx(1.0)
+
+
+def test_lambda_decreases_with_density():
+    # ring-k gets denser as k grows -> lambda must not increase
+    lams = [topology.spectral_lambda(topology.metropolis_w(topology.ring_adjacency(16, k)))
+            for k in range(1, 8)]
+    assert all(l2 <= l1 + 1e-12 for l1, l2 in zip(lams, lams[1:]))
+    assert lams[0] < 1.0
+
+
+def test_metropolis_doubly_stochastic_symmetric():
+    for adj in (topology.ring_adjacency(12, 2), topology.torus_adjacency(3, 4),
+                topology.hypercube_adjacency(16)):
+        w = topology.metropolis_w(adj)
+        assert np.allclose(w, w.T)
+        assert np.allclose(w.sum(0), 1.0)
+        assert np.allclose(w.sum(1), 1.0)
+        assert np.all(w >= -1e-12)
+
+
+def test_rate_increase_sparsifies():
+    c = _cap()
+    slow = topology.adjacency_from_rates(c, np.full(6, 1e5))
+    fast = topology.adjacency_from_rates(c, np.full(6, 1e8))
+    assert slow.sum() >= fast.sum()
+
+
+def test_reception_vs_transmission_based_common_rate_equal():
+    c = _cap()
+    r = np.full(6, 2e6)
+    a1 = topology.adjacency_from_rates(c, r, reception_based=False)
+    a2 = topology.adjacency_from_rates(c, r, reception_based=True)
+    assert np.array_equal(a1, a2)
+
+
+def test_connectivity_check():
+    assert topology.is_connected(topology.ring_adjacency(8, 1))
+    a = np.zeros((4, 4))
+    a[0, 1] = a[1, 0] = 1  # {0,1} and {2,3} disconnected
+    a[2, 3] = a[3, 2] = 1
+    assert not topology.is_connected(a)
+
+
+def test_hypercube_requires_power_of_two():
+    with pytest.raises(ValueError):
+        topology.hypercube_adjacency(6)
