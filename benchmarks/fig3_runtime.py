@@ -2,20 +2,21 @@
 lambda_target in {0.1, 0.3, 0.8}.
 
 Runtime per the paper's own method (§IV-A): measured compute wall-clock +
-Eq. 3 modeled communication time (t_com per mixing round x iterations).
-Headline claim reproduced: at eps=5, the time for lambda_target=0.8 to reach
-a fixed accuracy is ~3.9x shorter than 0.3 and ~8.0x shorter than 0.1. We
-report the same ratio structure (time to final accuracy) on the surrogate
-dataset: the t_com part is exact arithmetic, the compute part is measured.
+simulated communication time. Communication now runs through the
+discrete-event simulator's **static** scenario (``repro.sim``) — packet-level
+TDM over the frozen capacity matrix — which reproduces the old direct Eq. 3
+arithmetic (``comm_model.tdm_time_s`` x iterations) to float64 rounding;
+``tests/test_sim.py`` pins that equivalence at 1e-9 relative. Headline claim
+reproduced: at eps=5, the time for lambda_target=0.8 to reach a fixed
+accuracy is ~3.9x shorter than 0.3 and ~8.0x shorter than 0.1. We report the
+same ratio structure (time to final accuracy) on the surrogate dataset.
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import channel, rate_opt
 from repro.models import cnn
+from repro.sim import WirelessSimulator, get_scenario
 
 from .fig3_epoch import run_dpsgd_cnn
 from repro.data import SyntheticFashion
@@ -36,13 +37,13 @@ def runtime_table(epochs: int = 3, n: int = 6, seed: int = 0):
                                                   ds=ds, seed=seed)
         cache[lam_t] = (accs, t_compute, iters)
     for eps in (3.0, 4.0, 5.0, 6.0):
-        pos = channel.random_placement(n, 200.0, seed=seed)
-        cap = channel.capacity_matrix(pos,
-                                      channel.ChannelParams(path_loss_exp=eps))
         for lam_t in (0.1, 0.3, 0.8):
             accs, t_compute, iters = cache[lam_t]
-            sol = rate_opt.solve(cap, cnn.MODEL_BITS, lam_t)
-            t_com_total = sol.t_com_s * iters
+            sim = WirelessSimulator(get_scenario(
+                "static", n_nodes=n, seed=seed, path_loss_exp=eps,
+                lambda_target=lam_t, model_bits=float(cnn.MODEL_BITS)))
+            sol = sim.solution
+            t_com_total = sim.run(iters).total_comm_s
             rows.append({
                 "eps": eps, "lambda_target": lam_t, "achieved_lam": sol.lam,
                 "final_acc": accs[-1], "t_compute_s": t_compute,

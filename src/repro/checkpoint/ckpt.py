@@ -107,7 +107,13 @@ def reshape_nodes(state: PyTree, survivors: list[int], n_new: int) -> PyTree:
         kept = leaf[np.asarray(survivors)]
         if n_new <= kept.shape[0]:
             return kept[:n_new]
-        fill = kept.mean(axis=0, keepdims=True).astype(leaf.dtype)
+        # compute the warm-start mean on host: XLA's on-device reduction can
+        # drift ~20 float32 ulps from numpy's pairwise sum on near-cancelling
+        # rows, which breaks bit-for-bit agreement across hosts replaying the
+        # same elastic event
+        kept_np = np.asarray(kept)
+        fill = jnp.asarray(kept_np.mean(axis=0, keepdims=True)
+                           .astype(kept_np.dtype))
         extra = jnp.broadcast_to(fill, (n_new - kept.shape[0], *kept.shape[1:]))
         return jnp.concatenate([kept, extra], axis=0)
     return jax.tree.map(fix, state)

@@ -47,10 +47,26 @@ class RateSolution:
 
 
 def candidate_rates(capacity: np.ndarray, i: int) -> np.ndarray:
-    """Distinct finite capacities of row i, descending (fastest first)."""
+    """Distinct finite positive capacities of row i, descending (fastest
+    first). Zero-capacity entries (e.g. links clipped away by the fading
+    margin) are not transmission rates: R_i = 0 would satisfy C_ij >= R_i
+    for *every* j while costing infinite airtime under Eq. 3."""
     row = capacity[i]
-    vals = np.unique(row[np.isfinite(row)])
+    vals = np.unique(row[np.isfinite(row) & (row > 0)])
     return vals[::-1]
+
+
+def _per_node_candidates(capacity: np.ndarray) -> list[np.ndarray]:
+    """Candidate rates per row; a fully-isolated row (no positive capacity)
+    falls back to the fastest rate in the matrix — the node reaches nobody
+    either way, so it should at least waste minimal airtime."""
+    n = capacity.shape[0]
+    per_node = [candidate_rates(capacity, i) for i in range(n)]
+    finite = capacity[np.isfinite(capacity) & (capacity > 0)]
+    if not finite.size:
+        raise ValueError("capacity matrix has no positive finite entries")
+    fallback = np.array([finite.max()])
+    return [p if p.size else fallback for p in per_node]
 
 
 def _evaluate(
@@ -81,7 +97,7 @@ def solve_bruteforce(
     n = capacity.shape[0]
     if n > max_nodes:
         raise ValueError(f"brute force capped at n={max_nodes}; use solve() for n={n}")
-    per_node = [candidate_rates(capacity, i) for i in range(n)]
+    per_node = _per_node_candidates(capacity)
     best: Optional[RateSolution] = None
     for combo in itertools.product(*per_node):
         sol = _evaluate(capacity, np.asarray(combo), model_bits, lambda_target, reception_based)
@@ -103,7 +119,9 @@ def solve_common_rate(
 ) -> RateSolution:
     """All nodes share a single rate: scan distinct capacities descending and
     return the fastest feasible one. O(n^2) candidates x O(n^3) eig."""
-    vals = np.unique(capacity[np.isfinite(capacity)])[::-1]
+    vals = np.unique(capacity[np.isfinite(capacity) & (capacity > 0)])[::-1]
+    if not vals.size:
+        raise ValueError("capacity matrix has no positive finite entries")
     n = capacity.shape[0]
     best: Optional[RateSolution] = None
     for r in vals:
@@ -128,11 +146,14 @@ def solve_k_nearest(
     n = capacity.shape[0]
     best: Optional[RateSolution] = None
     worst: Optional[RateSolution] = None
+    per_node = _per_node_candidates(capacity)
     for k in range(1, n):
         rates = np.empty(n)
         for i in range(n):
-            row = np.sort(capacity[i][np.isfinite(capacity[i])])[::-1]
-            rates[i] = row[min(k - 1, row.size - 1)]
+            row = np.sort(capacity[i][np.isfinite(capacity[i])
+                                      & (capacity[i] > 0)])[::-1]
+            rates[i] = row[min(k - 1, row.size - 1)] if row.size \
+                else per_node[i][0]
         sol = _evaluate(capacity, rates, model_bits, lambda_target, reception_based)
         worst = sol
         if sol.feasible and (best is None or sol.t_com_s < best.t_com_s):
@@ -152,7 +173,7 @@ def solve_greedy(
     picking the raise with the best t_com improvement that stays feasible.
     Terminates when no single raise is feasible."""
     n = capacity.shape[0]
-    per_node = [candidate_rates(capacity, i) for i in range(n)]  # descending
+    per_node = _per_node_candidates(capacity)  # descending
     idx = np.array([len(per_node[i]) - 1 for i in range(n)])     # start = slowest/densest
     rates = np.array([per_node[i][idx[i]] for i in range(n)])
     cur = _evaluate(capacity, rates, model_bits, lambda_target, reception_based)

@@ -46,6 +46,7 @@ class ElasticController:
     # wireless mode
     capacity: Optional[np.ndarray] = None   # (n, n) channel-capacity matrix
     model_bits: float = 0.0
+    solver_method: str = "auto"             # rate_opt.solve method for replans
     heartbeat_timeout_s: float = 30.0
 
     def __post_init__(self):
@@ -83,7 +84,8 @@ class ElasticController:
         if self.mode == "wireless":
             assert self.capacity is not None
             cap = self.capacity[np.ix_(self.live, self.live)]
-            return rate_opt.solve(cap, self.model_bits, self.lambda_target)
+            return rate_opt.solve(cap, self.model_bits, self.lambda_target,
+                                  method=self.solver_method)
         # pod mode: survivors re-form a 1-D replica ring of size n
         return choose_plan(self.axis_names, (n,), self.lambda_target,
                            self.bytes_per_rank, self.link)

@@ -1,0 +1,41 @@
+"""Discrete-event wireless network simulator (time-domain layer over the
+paper's static model).
+
+The repo's original evaluation freezes the channel: one capacity matrix,
+one Algorithm 2 solve, Eq. 3 arithmetic for communication time. This
+package adds the time axis — per-slot fading realizations, packet-level TDM
+with outage/retransmission, node mobility and Poisson churn, and drift-
+triggered re-planning — while keeping the static scenario numerically
+identical to the Eq. 3 model (the regression anchor for
+``benchmarks/fig3_runtime.py``).
+
+Modules:
+
+* ``events``   — deterministic event queue + simulated clock
+* ``fading``   — Rayleigh/shadowing ``C_ij(t)`` over ``core.channel``
+* ``mac``      — packet-level TDM broadcast, outage, retransmission
+* ``mobility`` — waypoint/cluster motion + Poisson churn
+* ``scenario`` — named scenario registry (static/fading/mobile/churn/mixed)
+* ``trace``    — event loop, per-round traces, accuracy-vs-simulated-time
+"""
+from .events import Event, EventKind, EventQueue, SimClock
+from .fading import FadingChannel, FadingParams
+from .mac import MacParams, RoundResult, tdm_round
+from .mobility import (ClusterMobility, PoissonChurn, RandomWaypoint,
+                       StaticMobility, make_mobility)
+from .scenario import (DEFAULT_MODEL_BITS, ScenarioConfig, get_scenario,
+                       list_scenarios, register)
+from .trace import (RoundContext, RoundRecord, SimTrace, WirelessSimulator,
+                    simulate_dpsgd_cnn)
+
+__all__ = [
+    "Event", "EventKind", "EventQueue", "SimClock",
+    "FadingChannel", "FadingParams",
+    "MacParams", "RoundResult", "tdm_round",
+    "ClusterMobility", "PoissonChurn", "RandomWaypoint", "StaticMobility",
+    "make_mobility",
+    "DEFAULT_MODEL_BITS", "ScenarioConfig", "get_scenario", "list_scenarios",
+    "register",
+    "RoundContext", "RoundRecord", "SimTrace", "WirelessSimulator",
+    "simulate_dpsgd_cnn",
+]

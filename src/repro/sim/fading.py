@@ -1,0 +1,134 @@
+"""Time-varying channel: Rayleigh block fading + AR(1) log-normal shadowing.
+
+Layers per-slot small-scale fading and temporally-correlated shadowing on top
+of ``core.channel``'s log-distance path-loss mean, turning the frozen
+capacity matrix into a time series ``C_ij(t)``:
+
+    gamma_ij(t) = gamma_pl(d_ij) * |h_ij(t)|^2 * 10^(S_ij(t)/10)
+    C_ij(t)     = B log2(1 + gamma_ij(t)/B)                       (Eq. 2)
+
+* ``|h|^2 ~ Exp(1)`` — Rayleigh power gain, redrawn each coherence block,
+  symmetric (reciprocal channel).
+* ``S`` — shadowing in dB, Gauss-Markov AR(1) across coherence blocks with
+  stationary std ``shadowing_sigma_db`` (Gudmundson-style correlation).
+
+Block fading: time is cut into coherence blocks of ``coherence_s`` seconds;
+realizations are constant within a block and drawn deterministically from
+``(seed, block_index)`` so any two runs (and any two nodes replaying the
+trace) see the identical channel. With ``fading=None`` the channel is
+exactly ``channel.capacity_matrix`` — the margin-reduced static matrix the
+rate optimizer sees — which is what makes the static scenario reproduce
+Eq. 3 bit-for-bit.
+
+Note the asymmetry that creates the outage/goodput tradeoff: the *solver*
+always plans on the margin-reduced mean (``mean_capacity``), while the MAC
+tests transmissions against the *instantaneous* ``capacity_at``. A larger
+``fading_margin_bps`` buys headroom (fewer outages) at lower rate — the
+static knob of §II-B become an actual risk dial.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core import channel
+
+__all__ = ["FadingParams", "FadingChannel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FadingParams:
+    """Small-scale + shadowing process constants."""
+
+    rayleigh: bool = True              # Exp(1) power gain per block
+    shadowing_sigma_db: float = 0.0    # stationary shadowing std [dB]; 0 = off
+    shadowing_corr: float = 0.9        # AR(1) coefficient between blocks
+    coherence_s: float = 0.05          # block length [s]
+    seed: int = 0
+
+
+class FadingChannel:
+    """Deterministic ``C_ij(t)`` generator over a (possibly moving) node set."""
+
+    def __init__(self, params: channel.ChannelParams,
+                 fading: Optional[FadingParams] = None):
+        self.params = params
+        self.fading = fading
+        self._shadow_block: int = -1
+        self._shadow_db: Optional[np.ndarray] = None
+
+    # -- planning view -------------------------------------------------------
+    def mean_capacity(self, positions: np.ndarray) -> np.ndarray:
+        """Margin-reduced path-loss capacity — the matrix Algorithm 2 plans
+        on (identical to the repo's original static model)."""
+        return channel.capacity_matrix(positions, self.params)
+
+    # -- instantaneous view --------------------------------------------------
+    def block_index(self, t: float) -> int:
+        if self.fading is None:
+            return 0
+        return int(np.floor(t / self.fading.coherence_s))
+
+    def capacity_at(self, positions: np.ndarray, t: float) -> np.ndarray:
+        """Instantaneous (n, n) capacity at simulated time ``t``.
+
+        Without fading this is exactly the static planning matrix; with
+        fading the *raw* (un-margined) path-loss mean is modulated by the
+        block realizations — the margin lives in the plan, the fades live
+        here.
+        """
+        if self.fading is None:
+            return channel.capacity_matrix(positions, self.params)
+        d = channel.pairwise_distances(positions)
+        n = d.shape[0]
+        gamma = channel.snr_linear(np.where(d > 0, d, 1.0), self.params)
+        block = self.block_index(t)
+        gain = self._block_gain(block, n)
+        cap = self.params.bandwidth_hz * np.log2(
+            1.0 + gamma * gain / self.params.bandwidth_hz)
+        cap[np.arange(n), np.arange(n)] = np.inf
+        return cap
+
+    # -- block realizations --------------------------------------------------
+    def _block_gain(self, block: int, n: int) -> np.ndarray:
+        """Symmetric (n, n) linear power gain for one coherence block."""
+        f = self.fading
+        assert f is not None
+        gain = np.ones((n, n))
+        if f.rayleigh:
+            rng = np.random.default_rng((f.seed, 2 * block))
+            h2 = rng.exponential(1.0, size=(n, n))
+            iu = np.triu_indices(n, 1)
+            h2.T[iu] = h2[iu]  # reciprocal channel
+            gain *= h2
+        if f.shadowing_sigma_db > 0.0:
+            gain *= 10.0 ** (self._shadow(block, n) / 10.0)
+        return gain
+
+    def _shadow(self, block: int, n: int) -> np.ndarray:
+        """AR(1) shadowing [dB], advanced sequentially (blocks are monotone
+        because the sim clock is). A node-set size change (churn) restarts
+        the process at stationarity for the new set."""
+        f = self.fading
+        assert f is not None
+
+        def draw(b: int, scale: float) -> np.ndarray:
+            rng = np.random.default_rng((f.seed, 2 * b + 1))
+            s = rng.normal(0.0, scale, size=(n, n))
+            iu = np.triu_indices(n, 1)
+            s.T[iu] = s[iu]
+            np.fill_diagonal(s, 0.0)
+            return s
+
+        if (self._shadow_db is None or self._shadow_db.shape[0] != n
+                or block < self._shadow_block):
+            self._shadow_block = block
+            self._shadow_db = draw(block, f.shadowing_sigma_db)
+        while self._shadow_block < block:
+            self._shadow_block += 1
+            innov = draw(self._shadow_block,
+                         f.shadowing_sigma_db * np.sqrt(1 - f.shadowing_corr**2))
+            self._shadow_db = f.shadowing_corr * self._shadow_db + innov
+        return self._shadow_db

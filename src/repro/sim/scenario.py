@@ -1,0 +1,158 @@
+"""Named simulation scenarios: dataclass configs + registry.
+
+A scenario bundles every knob of the discrete-event simulator — channel
+constants, fading process, mobility model, churn rate, MAC, replan policy —
+under one name so benchmarks, examples, and tests all speak the same
+vocabulary:
+
+* ``static``  — the paper's setup verbatim: frozen placement, no fading, no
+  churn. This is the regression anchor: its simulated round time equals
+  Eq. 3's ``tdm_time_s`` to float64 rounding.
+* ``fading``  — Rayleigh block fading + correlated shadowing on the static
+  placement; the plan's ``fading_margin_bps`` becomes a real
+  outage-vs-goodput dial.
+* ``mobile``  — random-waypoint motion with drift-triggered re-runs of
+  Algorithm 2 (`rate_opt.solve`) as the capacity matrix wanders.
+* ``churn``   — Poisson node failures feeding
+  ``runtime.fault.ElasticController`` (survivor replan + elastic reshape).
+* ``mixed``   — cluster mobility + fading + churn + periodic replan, all at
+  once; the stress case.
+
+Register custom scenarios with ``register``; fetch-and-override with
+``get_scenario(name, **overrides)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..core.channel import ChannelParams
+from .fading import FadingParams
+from .mac import MacParams
+
+__all__ = ["ScenarioConfig", "register", "get_scenario", "list_scenarios",
+           "DEFAULT_MODEL_BITS"]
+
+# paper §IV-A message size: the 21 840-param CNN at float32
+# (== models.cnn.MODEL_BITS; cross-checked in tests/test_sim.py — the sim
+# core stays jax-free, so no import from models here)
+DEFAULT_MODEL_BITS = 21_840 * 32.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Everything a simulator run needs, frozen and hashable."""
+
+    name: str
+    # node set / placement (paper §IV: n=6 in a 200 m square)
+    n_nodes: int = 6
+    area_m: float = 200.0
+    seed: int = 0
+    min_nodes: int = 3            # churn never shrinks the net below this
+    # channel constants (paper Fig. 3 defaults)
+    path_loss_exp: float = 5.0
+    p_tx_dbm: float = 0.0
+    bandwidth_hz: float = 20e6
+    noise_floor_dbm: float = -172.0
+    fading_margin_bps: float = 0.0
+    # workload
+    model_bits: float = DEFAULT_MODEL_BITS
+    lambda_target: float = 0.3
+    compute_s_per_round: float = 0.0   # simulated per-iteration compute time
+    # time-varying processes (None / "static" / 0.0 = off)
+    fading: Optional[FadingParams] = None
+    mobility_kind: str = "static"      # static | waypoint | cluster
+    speed_mps: float = 1.5
+    pause_s: float = 0.0
+    n_clusters: int = 2
+    cluster_spread_m: float = 20.0
+    churn_rate_per_s: float = 0.0
+    # link layer
+    mac: MacParams = dataclasses.field(default_factory=MacParams)
+    # replan policy (Algorithm 2 re-runs)
+    solver: str = "auto"               # rate_opt.solve method (auto = exact)
+    replan_every_rounds: int = 0       # 0 = never on a schedule
+    replan_drift_rel: float = 0.0      # 0 = never on drift
+    # evaluation cadence for training traces
+    eval_every_rounds: int = 4
+
+    def channel_params(self) -> ChannelParams:
+        return ChannelParams(
+            p_tx_dbm=self.p_tx_dbm,
+            bandwidth_hz=self.bandwidth_hz,
+            noise_floor_dbm=self.noise_floor_dbm,
+            path_loss_exp=self.path_loss_exp,
+            fading_margin_bps=self.fading_margin_bps,
+        )
+
+    def replace(self, **kw) -> "ScenarioConfig":
+        return dataclasses.replace(self, **kw)
+
+
+_REGISTRY: dict[str, ScenarioConfig] = {}
+
+
+def register(cfg: ScenarioConfig) -> ScenarioConfig:
+    if cfg.name in _REGISTRY:
+        raise ValueError(f"scenario {cfg.name!r} already registered")
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_scenario(name: str, **overrides) -> ScenarioConfig:
+    try:
+        base = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {sorted(_REGISTRY)}") from None
+    return base.replace(**overrides) if overrides else base
+
+
+def list_scenarios() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Built-in scenarios
+# ---------------------------------------------------------------------------
+
+register(ScenarioConfig(name="static"))
+
+register(ScenarioConfig(
+    name="fading",
+    fading=FadingParams(rayleigh=True, shadowing_sigma_db=3.0,
+                        shadowing_corr=0.9, coherence_s=0.01),
+    # plan with headroom: the margin trades rate for outage probability
+    # (2 Mbps margin + lambda 0.5 keeps Eq. 8 feasible at ~20 % link outage;
+    # sparser targets are faster but fall apart under deep fades)
+    fading_margin_bps=2e6,
+    lambda_target=0.5,
+    mac=MacParams(max_retx_rounds=3),
+))
+
+register(ScenarioConfig(
+    name="mobile",
+    mobility_kind="waypoint",
+    speed_mps=5.0,
+    replan_drift_rel=0.15,        # re-run Algorithm 2 when C drifts >= 15 %
+    replan_every_rounds=16,       # …and at least this often
+))
+
+register(ScenarioConfig(
+    name="churn",
+    churn_rate_per_s=0.15,
+))
+
+register(ScenarioConfig(
+    name="mixed",
+    fading=FadingParams(rayleigh=True, shadowing_sigma_db=3.0,
+                        shadowing_corr=0.9, coherence_s=0.01),
+    fading_margin_bps=2e6,
+    lambda_target=0.5,
+    mobility_kind="cluster",
+    speed_mps=3.0,
+    churn_rate_per_s=0.1,
+    replan_every_rounds=8,
+    replan_drift_rel=0.2,
+    mac=MacParams(max_retx_rounds=3),
+))

@@ -1,0 +1,372 @@
+"""Event-loop simulator + per-round traces + training on simulated time.
+
+``WirelessSimulator`` ties the subsystem together: one ``EventQueue`` orders
+round starts against Poisson churn arrivals; each ``ROUND_START`` first
+applies any due churn/replan, then runs a packet-level TDM round
+(``mac.tdm_round``) over the
+instantaneous channel (``fading.FadingChannel`` on the current
+``mobility`` positions) and emits a ``RoundRecord``. The clock advances
+through *simulated* seconds — airtime plus compute — so traces are
+accuracy-vs-simulated-wall-clock, the axis the paper's runtime claim lives
+on (§IV-A: measured compute + modeled communication).
+
+Plans come from ``runtime.fault.ElasticController.replan`` (the paper's
+Eq. 8 on the live node set) and are refreshed when
+
+* the schedule says so (``replan_every_rounds``),
+* the mean capacity drifts past ``replan_drift_rel`` (mobility), or
+* churn shrinks the node set (the controller's own elastic path).
+
+The mixing matrix actually applied each round is ``RoundResult.effective_w``
+— the *reception* graph realized by the MAC (who decoded whom), which under
+a static channel and feasible plan is exactly the plan's graph, and under
+fading loses edges per-round (outage → re-row-normalized W).
+
+``simulate_dpsgd_cnn`` drives ``core.dpsgd`` training through the simulator
+(the paper's Fig. 3 CNN on the surrogate set), yielding accuracy points
+stamped with simulated time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..core.topology import adjacency_from_rates, spectral_lambda
+from ..runtime.fault import ElasticController
+from .events import EventKind, EventQueue, SimClock
+from .fading import FadingChannel
+from .mac import RoundResult, tdm_round
+from .mobility import PoissonChurn, make_mobility
+from .scenario import ScenarioConfig
+
+__all__ = ["RoundRecord", "SimTrace", "RoundContext", "WirelessSimulator",
+           "simulate_dpsgd_cnn"]
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """One mixing round of the trace."""
+
+    round: int
+    n_live: int
+    t_start_s: float
+    t_comm_s: float
+    t_compute_s: float
+    lam_planned: float            # lambda of the active plan
+    lam_effective: float          # lambda of the W actually realized
+    feasible: bool
+    intended_links: int
+    outage_links: int
+    retx_packets: int
+    delivered_frac: float
+    replanned: bool
+    loss: Optional[float] = None
+    acc: Optional[float] = None
+
+    @property
+    def t_end_s(self) -> float:
+        return self.t_start_s + self.t_comm_s + self.t_compute_s
+
+
+@dataclasses.dataclass
+class SimTrace:
+    """Full run output: per-round records + run-level counters."""
+
+    scenario: str
+    records: list[RoundRecord]
+    replans: int
+    failures: list[tuple[int, int]]   # (round, original node id)
+    t_end_s: float
+    events_processed: int
+
+    @property
+    def total_comm_s(self) -> float:
+        return float(sum(r.t_comm_s for r in self.records))
+
+    @property
+    def total_compute_s(self) -> float:
+        return float(sum(r.t_compute_s for r in self.records))
+
+    def accuracy_curve(self) -> list[tuple[float, float]]:
+        """(simulated wall-clock [s], accuracy) at every evaluation point."""
+        return [(r.t_end_s, r.acc) for r in self.records if r.acc is not None]
+
+    def summary(self) -> dict:
+        n_int = sum(r.intended_links for r in self.records)
+        n_out = sum(r.outage_links for r in self.records)
+        return {
+            "scenario": self.scenario,
+            "rounds": len(self.records),
+            "t_end_s": self.t_end_s,
+            "total_comm_s": self.total_comm_s,
+            "total_compute_s": self.total_compute_s,
+            "outage_rate": (n_out / n_int) if n_int else 0.0,
+            "retx_packets": sum(r.retx_packets for r in self.records),
+            "replans": self.replans,
+            "failures": len(self.failures),
+            "final_n_live": self.records[-1].n_live if self.records else 0,
+            "final_acc": next((r.acc for r in reversed(self.records)
+                               if r.acc is not None), None),
+        }
+
+
+@dataclasses.dataclass
+class RoundContext:
+    """What a training driver sees at each round, before it steps."""
+
+    round: int
+    t_start_s: float
+    ids: list[int]                       # original node id per state row
+    churn: list[list[int]]               # survivor rows (state space) per event
+    result: RoundResult
+    w_eff: np.ndarray
+    solution: object                     # rate_opt.RateSolution
+    replanned: bool
+
+
+Driver = Callable[[RoundContext], Optional[dict]]
+
+
+class WirelessSimulator:
+    """Discrete-event simulation of one scenario (see ``sim.scenario``)."""
+
+    def __init__(self, cfg: ScenarioConfig):
+        self.cfg = cfg
+        self.clock = SimClock()
+        self.queue = EventQueue()
+        self.channel = FadingChannel(cfg.channel_params(), cfg.fading)
+        self.mobility = make_mobility(
+            cfg.mobility_kind, cfg.n_nodes, cfg.area_m, cfg.seed,
+            speed_mps=cfg.speed_mps, pause_s=cfg.pause_s,
+            n_clusters=cfg.n_clusters, spread_m=cfg.cluster_spread_m)
+        self.churn = PoissonChurn(cfg.churn_rate_per_s, cfg.seed)
+        self.ids: list[int] = list(range(cfg.n_nodes))
+        self.controller = ElasticController(
+            n_nodes=cfg.n_nodes, lambda_target=cfg.lambda_target,
+            mode="wireless", capacity=self._mean_capacity(),
+            model_bits=cfg.model_bits, solver_method=cfg.solver)
+        self.replans = -1           # initial plan is not a *re*-plan
+        self.failures: list[tuple[int, int]] = []
+        self._round = 0
+        self._pending_churn: list[list[int]] = []
+        self._need_replan = False
+        self._cap_cache: Optional[tuple[int, np.ndarray]] = None
+        self._replan()
+
+    # -- geometry / channel --------------------------------------------------
+    def _positions(self) -> np.ndarray:
+        return self.mobility.positions(self.clock.now)[np.asarray(self.ids)]
+
+    def _mean_capacity(self) -> np.ndarray:
+        return self.channel.mean_capacity(self._positions())
+
+    def _capacity_at(self, pos_round: np.ndarray, t: float) -> np.ndarray:
+        """Instantaneous capacity, cached per coherence block (positions are
+        frozen at the round start — motion within one round is negligible at
+        pedestrian/vehicular speeds)."""
+        block = self.channel.block_index(t)
+        if self._cap_cache is None or self._cap_cache[0] != block:
+            self._cap_cache = (block, self.channel.capacity_at(pos_round, t))
+        return self._cap_cache[1]
+
+    # -- planning ------------------------------------------------------------
+    def _replan(self):
+        """Re-run Algorithm 2 (via the elastic controller) on the current
+        mean capacity of the live node set."""
+        m = self._mean_capacity()
+        self.controller.capacity = m
+        self.solution = self.controller.replan()
+        self._plan_cap = m
+        self._intended = adjacency_from_rates(
+            m, self.solution.rates_bps).astype(bool)
+        self.replans += 1
+        self._need_replan = False
+
+    def _drifted(self) -> bool:
+        if self.cfg.replan_drift_rel <= 0:
+            return False
+        m = self._mean_capacity()
+        mask = np.isfinite(self._plan_cap) & (self._plan_cap > 0)
+        np.fill_diagonal(mask, False)
+        if not mask.any():
+            return False
+        rel = np.abs(m[mask] - self._plan_cap[mask]) / self._plan_cap[mask]
+        return bool(rel.max() >= self.cfg.replan_drift_rel)
+
+    # -- event handlers ------------------------------------------------------
+    def _handle_churn(self):
+        if len(self.ids) <= self.cfg.min_nodes:
+            return
+        victim = self.churn.pick_victim(list(range(len(self.ids))))
+        self.controller.fail(self._round, (victim,))
+        orig = self.ids.pop(victim)
+        self.failures.append((self._round, orig))
+        survivors = [k for k in range(len(self.ids) + 1) if k != victim]
+        self._pending_churn.append(survivors)
+        # compact the controller back to row-index space
+        self.controller.live = list(range(len(self.ids)))
+        self.controller.n_nodes = len(self.ids)
+        self._need_replan = True
+
+    def _handle_round(self, driver: Optional[Driver]) -> RoundRecord:
+        cfg = self.cfg
+        if (cfg.replan_every_rounds > 0 and self._round > 0
+                and self._round % cfg.replan_every_rounds == 0):
+            self._need_replan = True
+        if self._need_replan or self._drifted():
+            self._replan()
+            replanned = True
+        else:
+            replanned = False
+
+        pos_round = self._positions()
+        self._cap_cache = None
+        result = tdm_round(
+            self.clock, self.solution.rates_bps, self._intended,
+            cfg.model_bits, lambda t: self._capacity_at(pos_round, t),
+            cfg.mac)
+        w_eff = result.effective_w()
+
+        metrics: dict = {}
+        if driver is not None:
+            ctx = RoundContext(
+                round=self._round, t_start_s=result.t_start_s,
+                ids=list(self.ids), churn=self._pending_churn,
+                result=result, w_eff=w_eff, solution=self.solution,
+                replanned=replanned)
+            metrics = driver(ctx) or {}
+        self._pending_churn = []
+        compute_s = float(metrics.get("compute_s", cfg.compute_s_per_round))
+        self.clock.advance(compute_s)
+
+        rec = RoundRecord(
+            round=self._round, n_live=len(self.ids),
+            t_start_s=result.t_start_s, t_comm_s=result.duration_s,
+            t_compute_s=compute_s,
+            lam_planned=float(self.solution.lam),
+            lam_effective=float(spectral_lambda(w_eff)),
+            feasible=bool(self.solution.feasible),
+            intended_links=int(result.intended.sum()),
+            outage_links=result.outage_links,
+            retx_packets=result.retx_packets,
+            delivered_frac=result.delivered_frac,
+            replanned=replanned,
+            loss=metrics.get("loss"), acc=metrics.get("acc"))
+        self._round += 1
+        return rec
+
+    # -- main loop -----------------------------------------------------------
+    def run(self, n_rounds: int, driver: Optional[Driver] = None) -> SimTrace:
+        """Simulate ``n_rounds`` mixing rounds. ``driver`` (optional) is
+        called once per round to run training and report metrics/compute
+        time; without it, rounds cost ``compute_s_per_round``.
+
+        Churn arrivals land on the queue in continuous time and take effect
+        at the next round boundary (failure *detection* happens at the
+        synchronization point, like the heartbeat check in
+        ``runtime.fault``)."""
+        records: list[RoundRecord] = []
+        t_next = self.churn.next_arrival()
+        if np.isfinite(t_next):
+            self.queue.push(t_next, EventKind.CHURN_FAIL)
+        self.queue.push(self.clock.now, EventKind.ROUND_START)
+
+        while self.queue and len(records) < n_rounds:
+            ev = self.queue.pop()
+            if ev.kind is EventKind.CHURN_FAIL:
+                self._handle_churn()
+                t_next = self.churn.next_arrival()
+                if np.isfinite(t_next):
+                    self.queue.push(t_next, EventKind.CHURN_FAIL)
+            elif ev.kind is EventKind.ROUND_START:
+                records.append(self._handle_round(driver))
+                if len(records) < n_rounds:
+                    self.queue.push(self.clock.now, EventKind.ROUND_START)
+            else:  # pragma: no cover - no other kinds are scheduled here
+                raise RuntimeError(f"unhandled event {ev.kind}")
+
+        return SimTrace(
+            scenario=self.cfg.name, records=records, replans=self.replans,
+            failures=list(self.failures), t_end_s=self.clock.now,
+            events_processed=self.queue.processed)
+
+
+# ---------------------------------------------------------------------------
+# Training on simulated time
+# ---------------------------------------------------------------------------
+
+def simulate_dpsgd_cnn(
+    cfg: ScenarioConfig,
+    epochs: int = 2,
+    batch: int = 25,
+    eta: float = 0.05,
+    n_train: int = 1200,
+    n_test: int = 300,
+    ds=None,
+    measure_compute: bool = False,
+) -> tuple[SimTrace, dict]:
+    """Run the paper's CNN under a scenario; returns ``(trace, node_params)``.
+
+    Accuracy points in the trace are stamped with **simulated** wall-clock.
+    Per-round compute time is ``cfg.compute_s_per_round`` unless
+    ``measure_compute`` (then host-measured, like the paper's §IV-A method).
+    Churn events elastically reshape the node-stacked state via
+    ``checkpoint.reshape_nodes`` (survivor rows kept, replacements at the
+    survivor mean) — here we shrink, so survivor rows only.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..checkpoint.ckpt import reshape_nodes
+    from ..core import dpsgd
+    from ..core.dpsgd import DPSGDConfig
+    from ..data import SyntheticFashion, node_splits
+    from ..models import cnn
+
+    if abs(cfg.model_bits - cnn.MODEL_BITS) > 0.5:
+        cfg = cfg.replace(model_bits=float(cnn.MODEL_BITS))
+    ds = ds or SyntheticFashion(n_train=n_train, n_test=n_test, seed=0)
+    shards = node_splits(ds.train_x, ds.train_y, cfg.n_nodes, seed=0)
+    params = dpsgd.replicate(cnn.cnn_init(jax.random.key(cfg.seed)),
+                             cfg.n_nodes)
+    step = dpsgd.make_dpsgd_step(lambda p, b: cnn.cnn_loss(p, b),
+                                 DPSGDConfig(eta=eta))
+    per_node = len(shards[0][0])
+    iters_per_epoch = max(per_node // batch, 1)
+    n_rounds = iters_per_epoch * epochs
+    test_x = jnp.asarray(ds.test_x[:n_test])
+    test_y = jnp.asarray(ds.test_y[:n_test])
+
+    state = {"params": params, "shards": shards}
+
+    def driver(ctx: RoundContext) -> dict:
+        for survivors in ctx.churn:
+            state["params"] = reshape_nodes(state["params"], survivors,
+                                            len(survivors))
+            state["shards"] = [state["shards"][k] for k in survivors]
+        n_live = len(ctx.ids)
+        rng = np.random.default_rng((cfg.seed, 0xB0, ctx.round))
+        idx = rng.integers(0, per_node, size=(n_live, batch))
+        b = {"images": jnp.asarray(np.stack(
+                [state["shards"][i][0][idx[i]] for i in range(n_live)])),
+             "labels": jnp.asarray(np.stack(
+                [state["shards"][i][1][idx[i]] for i in range(n_live)]))}
+        t0 = time.perf_counter()
+        state["params"], losses = step(state["params"], b,
+                                       jnp.asarray(ctx.w_eff))
+        jax.block_until_ready(state["params"])
+        out = {"loss": float(losses.mean())}
+        if measure_compute:
+            out["compute_s"] = time.perf_counter() - t0
+        if (ctx.round + 1) % cfg.eval_every_rounds == 0 \
+                or ctx.round + 1 == n_rounds:
+            node0 = jax.tree.map(lambda p: p[0], state["params"])
+            out["acc"] = float(cnn.cnn_accuracy(node0, test_x, test_y))
+        return out
+
+    sim = WirelessSimulator(cfg)
+    trace = sim.run(n_rounds, driver)
+    return trace, state["params"]

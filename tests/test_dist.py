@@ -32,8 +32,9 @@ def test_shard_map_gossip_matches_dense_w():
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
         from repro.core.gossip import ring_plan, plan_w, gossip_mix_array
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        axt = getattr(jax.sharding, "AxisType", None)  # jax >= 0.5 only
+        kw = dict(axis_types=(axt.Auto,)) if axt else {}
+        mesh = jax.make_mesh((8,), ("data",), **kw)
         plan = ring_plan(("data",), (8,), 2)
         x = jax.random.normal(jax.random.key(0), (8, 16))
         fn = shard_map(lambda v: gossip_mix_array(v[0], plan)[None],
@@ -58,8 +59,9 @@ def test_mode_b_trainstep_on_mesh_contains_collective_permute():
         from repro.optim.schedule import constant_lr
         from repro.train import shardings as shr
         from repro.train.step import init_train_state, make_train_step
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        axt = getattr(jax.sharding, "AxisType", None)  # jax >= 0.5 only
+        kw = dict(axis_types=(axt.Auto,) * 2) if axt else {}
+        mesh = jax.make_mesh((4, 2), ("data", "model"), **kw)
         cfg = reduce_for_smoke(get_config("nemotron-4-15b"))
         api = build(cfg)
         run = RunConfig(mode="dpsgd", optimizer="sgd", remat="none")
@@ -123,8 +125,9 @@ def test_allreduce_mode_matches_single_node_sgd():
         tokens = jax.random.randint(jax.random.key(1), (8, 32), 0,
                                     cfg.vocab_size, jnp.int32)
         # sharded run
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        axt = getattr(jax.sharding, "AxisType", None)  # jax >= 0.5 only
+        kw = dict(axis_types=(axt.Auto,) * 2) if axt else {}
+        mesh = jax.make_mesh((4, 2), ("data", "model"), **kw)
         b_sh = jax.device_put(tokens, NamedSharding(mesh, P("data", None)))
         with mesh:
             s1, m1 = jax.jit(step)(state, {"tokens": b_sh})

@@ -1,7 +1,9 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import channel, gossip, rate_opt, topology
 from repro.core.bound import BoundParams, dpsgd_bound
