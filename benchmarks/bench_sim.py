@@ -1,0 +1,233 @@
+"""Wireless-plane perf harness: batched solvers + vectorized MAC vs the
+pinned pre-vectorization references, with exact-match cross-checks.
+
+Measures (median + min over several runs each):
+
+* ``solver``  — Algorithm 2 brute force on the paper's n=6 grid
+  (``eps=5``, ``lambda_target=0.3``): sequential reference vs batched
+  implementation, plus candidates/s of the batched pass.
+* ``sim``     — a 30-round ``fading`` scenario run end to end
+  ("pre" = per-packet loop MAC + one-rng-per-block channel + sequential
+  solvers, i.e. the retained pre-PR hot path; "post" = vectorized MAC +
+  chunked channel + batched solvers): rounds/s and packets/s.
+* ``sweep``   — the ``sim.trace.sweep`` driver over a multi-seed,
+  multi-scenario grid (Monte-Carlo style), rounds/s aggregate.
+
+Cross-checks (``checks`` in the JSON, process exits 1 on any failure):
+
+* every batched solver == its ``*_reference`` (identical ``rates_bps``,
+  ``t_com_s``, ``lam``) over random placements and lambda targets;
+* a fast-MAC and a reference-MAC simulator run of the same scenario produce
+  identical round durations / retx / outage / delivered fractions;
+* the static scenario still reproduces Eq. 3 to 1e-9 relative.
+
+Prints the JSON to stdout; full runs also write it to ``--out`` (default
+``BENCH_sim.json`` at the repo root) so every PR leaves a perf trajectory.
+``--quick`` never touches the tracked snapshot unless ``--out`` is given.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_sim [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import platform
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import channel, rate_opt
+from repro.sim import WirelessSimulator, get_scenario, sweep
+
+__all__ = ["main"]
+
+M_BITS = 698_880.0  # paper CNN model size
+
+
+def _timeit(fn, reps: int) -> tuple[float, float, object]:
+    """(median_s, min_s, last_result) over ``reps`` runs — the median is the
+    headline number (robust to scheduler noise on small containers), the min
+    approximates the unloaded cost."""
+    ts = []
+    res = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), float(min(ts)), res
+
+
+def bench_solver(reps: int) -> dict:
+    pos = channel.random_placement(6, 200.0, seed=0)
+    cap = channel.capacity_matrix(pos,
+                                  channel.ChannelParams(path_loss_exp=5.0))
+    n_candidates = int(np.prod(
+        [rate_opt.candidate_rates(cap, i).size for i in range(6)]))
+
+    def cold(fn):
+        def run():
+            rate_opt.clear_candidate_cache()
+            return fn(cap, M_BITS, 0.3)
+        return run
+
+    t_ref, t_ref_min, sol_ref = _timeit(
+        cold(rate_opt.solve_bruteforce_reference), reps)
+    t_fast, t_fast_min, sol_fast = _timeit(cold(rate_opt.solve_bruteforce),
+                                           reps)
+    match = (np.array_equal(sol_ref.rates_bps, sol_fast.rates_bps)
+             and sol_ref.t_com_s == sol_fast.t_com_s
+             and sol_ref.lam == sol_fast.lam)
+    return {
+        "n": 6, "lambda_target": 0.3, "candidates": n_candidates,
+        "t_reference_s": t_ref, "t_batched_s": t_fast,
+        "t_reference_min_s": t_ref_min, "t_batched_min_s": t_fast_min,
+        "speedup": t_ref / t_fast,
+        "speedup_min": t_ref_min / t_fast_min,
+        "candidates_per_s": n_candidates / t_fast,
+        "match": bool(match),
+    }
+
+
+def check_solvers(quick: bool) -> dict:
+    out: dict = {}
+    seeds = range(2) if quick else range(5)
+    for method in ("bruteforce", "common_rate", "k_nearest", "greedy"):
+        ok = True
+        for seed in seeds:
+            n = 4 + seed % 3
+            pos = channel.random_placement(n, 200.0, seed=seed)
+            cap = channel.capacity_matrix(
+                pos, channel.ChannelParams(path_loss_exp=3.5 + 0.5 * seed))
+            for lam_t in (0.3, 0.7, -1.0):
+                a = rate_opt._SOLVERS[method](cap, M_BITS, lam_t)
+                b = rate_opt._SOLVERS[method + "_reference"](cap, M_BITS, lam_t)
+                ok &= (np.array_equal(a.rates_bps, b.rates_bps)
+                       and a.t_com_s == b.t_com_s and a.lam == b.lam)
+        out[method] = bool(ok)
+    return out
+
+
+def bench_sim(reps: int, rounds: int) -> dict:
+    # "pre": the retained pre-vectorization hot path, end to end — loop MAC,
+    # one-rng-per-block fading, sequential Algorithm 2.
+    fading_legacy = dataclasses.replace(get_scenario("fading").fading,
+                                        rng_scheme="per_block")
+    pre_cfg = get_scenario("fading", reference_mac=True, fading=fading_legacy,
+                           solver="auto_reference")
+    post_cfg = get_scenario("fading")
+
+    def run_pre():
+        rate_opt.clear_candidate_cache()   # pre-PR solvers had no memoization
+        return WirelessSimulator(pre_cfg).run(rounds)
+
+    t_pre, t_pre_min, _ = _timeit(run_pre, reps)
+    t_post, t_post_min, trace = _timeit(
+        lambda: WirelessSimulator(post_cfg).run(rounds), reps)
+    first_pass = rounds * int(np.ceil(M_BITS / post_cfg.mac.packet_bits)) \
+        * post_cfg.n_nodes
+    total_packets = first_pass + trace.summary()["retx_packets"]
+    return {
+        "scenario": "fading", "rounds": rounds,
+        "t_pre_s": t_pre, "t_post_s": t_post,
+        "t_pre_min_s": t_pre_min, "t_post_min_s": t_post_min,
+        "speedup": t_pre / t_post,
+        "speedup_min": t_pre_min / t_post_min,
+        "rounds_per_s": rounds / t_post,
+        "packets_per_s": total_packets / t_post,
+        "packets": total_packets,
+    }
+
+
+def check_mac(rounds: int) -> dict:
+    out: dict = {}
+    for name in ("static", "fading", "mixed"):
+        tf = WirelessSimulator(get_scenario(name, solver="greedy")).run(rounds)
+        tr = WirelessSimulator(get_scenario(name, solver="greedy",
+                                            reference_mac=True)).run(rounds)
+        out[name] = bool(
+            tf.total_comm_s == tr.total_comm_s
+            and all(a.t_comm_s == b.t_comm_s
+                    and a.retx_packets == b.retx_packets
+                    and a.outage_links == b.outage_links
+                    and a.delivered_frac == b.delivered_frac
+                    for a, b in zip(tf.records, tr.records)))
+    # Eq. 3 static anchor
+    from repro.sim import DEFAULT_MODEL_BITS
+    cap = channel.capacity_matrix(
+        channel.random_placement(6, 200.0, seed=0),
+        channel.ChannelParams(path_loss_exp=5.0))
+    sol = rate_opt.solve(cap, DEFAULT_MODEL_BITS, 0.3)
+    trace = WirelessSimulator(get_scenario("static", lambda_target=0.3)).run(10)
+    rel = abs(trace.total_comm_s - sol.t_com_s * 10) / (sol.t_com_s * 10)
+    out["eq3_anchor_rel_err"] = rel
+    out["eq3_anchor"] = bool(rel < 1e-9)
+    return out
+
+
+def bench_sweep(quick: bool) -> dict:
+    seeds = range(2) if quick else range(5)
+    configs = [get_scenario(name, seed=s, solver="greedy")
+               for name in ("static", "fading") for s in seeds]
+    n_rounds = 3 if quick else 8
+    t0 = time.perf_counter()
+    traces = sweep(configs, n_rounds)
+    dt = time.perf_counter() - t0
+    total_rounds = sum(len(t.records) for t in traces)
+    return {
+        "configs": len(configs), "rounds_per_config": n_rounds,
+        "t_s": dt, "rounds_per_s": total_rounds / dt,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer reps/rounds, same cross-checks")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: repo-root BENCH_sim.json)")
+    args = ap.parse_args(argv)
+
+    reps = 1 if args.quick else 9
+    rounds = 10 if args.quick else 30
+    result = {
+        "schema": "bench_sim/v1",
+        "quick": bool(args.quick),
+        "platform": platform.platform(),
+        "numpy": np.__version__,
+        "solver": bench_solver(reps),
+        "sim": bench_sim(reps, rounds),
+        "sweep": bench_sweep(args.quick),
+        "checks": {
+            "solver": check_solvers(args.quick),
+            "mac": check_mac(4 if args.quick else 8),
+        },
+    }
+    checks = result["checks"]
+    failed = (not result["solver"]["match"]
+              or not all(checks["solver"].values())
+              or not all(v for k, v in checks["mac"].items()
+                         if isinstance(v, bool)))
+    result["ok"] = not failed
+
+    text = json.dumps(result, indent=2)
+    print(text)
+    if args.out:
+        Path(args.out).write_text(text + "\n")
+    elif not args.quick:
+        # only full runs update the tracked perf trajectory; --quick (CI
+        # smoke) must not clobber it with reps=1 numbers
+        out = Path(__file__).resolve().parent.parent / "BENCH_sim.json"
+        out.write_text(text + "\n")
+    if failed:
+        print("FAIL: batched implementations diverged from pinned references",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -17,7 +17,8 @@ from typing import Sequence
 
 import numpy as np
 
-__all__ = ["tdm_time_s", "LinkModel", "gossip_round_time_s", "allreduce_time_s"]
+__all__ = ["tdm_time_s", "tdm_time_batch_s", "LinkModel", "gossip_round_time_s",
+           "allreduce_time_s"]
 
 
 def tdm_time_s(model_bits: float, rates_bps: np.ndarray) -> float:
@@ -27,6 +28,19 @@ def tdm_time_s(model_bits: float, rates_bps: np.ndarray) -> float:
     if np.any(r <= 0):
         return float("inf")
     return float(model_bits * np.sum(1.0 / r))
+
+
+def tdm_time_batch_s(model_bits: float, rates_bps: np.ndarray) -> np.ndarray:
+    """Batched Eq. 3 over (B, n) candidate rate rows -> (B,) times.
+
+    Row b equals ``tdm_time_s(model_bits, rates_bps[b])`` bit-for-bit: the
+    last-axis reduction applies the same pairwise summation per row."""
+    r = np.atleast_2d(np.ascontiguousarray(rates_bps, dtype=np.float64))
+    bad = np.any(r <= 0, axis=-1)
+    with np.errstate(divide="ignore"):
+        t = model_bits * np.sum(1.0 / r, axis=-1)
+    t[bad] = np.inf
+    return t
 
 
 @dataclasses.dataclass(frozen=True)

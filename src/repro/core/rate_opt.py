@@ -15,6 +15,16 @@ reference and add scalable solvers that the property tests pin against it:
 * ``solve_greedy``       — start from the densest feasible solution and raise
                            individual rates while the constraint holds.
 
+Every public solver evaluates its whole candidate sweep as one batched
+linear-algebra pass (``adjacency_from_rates_batch`` -> ``paper_w`` ->
+``spectral_lambda_batch`` -> ``tdm_time_batch_s``), chunked to bound memory.
+The original one-candidate-at-a-time loops are retained verbatim as
+``*_reference`` — per-candidate results are bit-identical between the two
+paths, which ``tests/test_vectorized.py`` and ``benchmarks/bench_sim.py``
+pin. ``solve_bruteforce`` additionally accepts ``backend="jax"`` to push the
+batched eigenvalue pass through ``vmap``+``jit`` (approximate: jax's eig is
+not bit-identical to LAPACK-via-numpy; CPU-only for asymmetric W).
+
 Every solver is deterministic given (C, lambda_target), so — as in the paper —
 all nodes run it independently and arrive at the same R (no extra exchange).
 """
@@ -22,15 +32,20 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+from collections import OrderedDict
 from typing import Callable, Literal, Optional
 
 import numpy as np
 
-from .comm_model import tdm_time_s
-from .topology import adjacency_from_rates, paper_w, spectral_lambda
+from .comm_model import tdm_time_batch_s, tdm_time_s
+from .topology import (adjacency_from_rates, adjacency_from_rates_batch,
+                       paper_w, spectral_lambda, spectral_lambda_batch)
 
 __all__ = ["RateSolution", "solve_bruteforce", "solve_common_rate", "solve_k_nearest",
-           "solve_greedy", "solve", "candidate_rates"]
+           "solve_greedy", "solve", "candidate_rates",
+           "solve_bruteforce_reference", "solve_common_rate_reference",
+           "solve_k_nearest_reference", "solve_greedy_reference",
+           "evaluate_rates_batch", "clear_candidate_cache"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,17 +71,40 @@ def candidate_rates(capacity: np.ndarray, i: int) -> np.ndarray:
     return vals[::-1]
 
 
+# Candidate enumeration is pure in the capacity matrix, and ``solve("auto")``
+# runs three solvers over the same matrix back to back (the sim replans on
+# the same matrix even more often) — so memoize per matrix content.
+_CANDIDATE_CACHE: "OrderedDict[tuple, list[np.ndarray]]" = OrderedDict()
+_CANDIDATE_CACHE_MAX = 16
+
+
+def clear_candidate_cache() -> None:
+    """Drop the memoized per-node candidate sets (used by benchmarks to
+    time cold solves)."""
+    _CANDIDATE_CACHE.clear()
+
+
 def _per_node_candidates(capacity: np.ndarray) -> list[np.ndarray]:
     """Candidate rates per row; a fully-isolated row (no positive capacity)
     falls back to the fastest rate in the matrix — the node reaches nobody
     either way, so it should at least waste minimal airtime."""
+    capacity = np.asarray(capacity)
+    key = (capacity.shape, capacity.dtype.str, capacity.tobytes())
+    hit = _CANDIDATE_CACHE.get(key)
+    if hit is not None:
+        _CANDIDATE_CACHE.move_to_end(key)
+        return hit
     n = capacity.shape[0]
     per_node = [candidate_rates(capacity, i) for i in range(n)]
     finite = capacity[np.isfinite(capacity) & (capacity > 0)]
     if not finite.size:
         raise ValueError("capacity matrix has no positive finite entries")
     fallback = np.array([finite.max()])
-    return [p if p.size else fallback for p in per_node]
+    per_node = [p if p.size else fallback for p in per_node]
+    _CANDIDATE_CACHE[key] = per_node
+    while len(_CANDIDATE_CACHE) > _CANDIDATE_CACHE_MAX:
+        _CANDIDATE_CACHE.popitem(last=False)
+    return per_node
 
 
 def _evaluate(
@@ -83,7 +121,215 @@ def _evaluate(
     return RateSolution(rates, t, lam, w, lam <= lambda_target + 1e-12)
 
 
+# ---------------------------------------------------------------------------
+# Batched evaluation core
+# ---------------------------------------------------------------------------
+
+_JAX_LAM_FN = None
+
+
+def _spectral_lambda_batch_jax(w: np.ndarray) -> np.ndarray:
+    """vmap+jit eigenvalue pass for large batches. Approximate relative to
+    the numpy path (different eig kernels, default f32 unless x64 is on);
+    asymmetric eig is CPU-only in jax, so failures fall back to numpy."""
+    global _JAX_LAM_FN
+    try:
+        import jax
+        import jax.numpy as jnp
+
+        if _JAX_LAM_FN is None:
+            def _one(m):
+                e = jnp.linalg.eigvals(m)
+                mags = jnp.abs(e)
+                drop = jnp.argmin(jnp.abs(e - 1.0))
+                return jnp.max(mags.at[drop].set(-jnp.inf))
+
+            _JAX_LAM_FN = jax.jit(jax.vmap(_one))
+        return np.asarray(_JAX_LAM_FN(w), dtype=np.float64)
+    except Exception:
+        return spectral_lambda_batch(w)
+
+
+def evaluate_rates_batch(
+    capacity: np.ndarray,
+    rates: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    reception_based: bool = False,
+    backend: Literal["numpy", "jax"] = "numpy",
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Evaluate a (B, n) stack of candidate rate rows in one batched pass.
+
+    Returns ``(t_com_s, lam, feasible)`` arrays of shape (B,), each entry
+    bit-identical (numpy backend) to a scalar ``_evaluate`` of that row.
+    """
+    rates = np.atleast_2d(np.asarray(rates, dtype=np.float64))
+    a = adjacency_from_rates_batch(capacity, rates,
+                                   reception_based=reception_based)
+    w = paper_w(a)
+    if backend == "jax":
+        lam = _spectral_lambda_batch_jax(w)
+    else:
+        lam = spectral_lambda_batch(w)
+    t = tdm_time_batch_s(model_bits, rates)
+    return t, lam, lam <= lambda_target + 1e-12
+
+
+def _combo_rates(per_node: list[np.ndarray], flat_idx: np.ndarray) -> np.ndarray:
+    """Materialize candidate combos ``flat_idx`` (itertools.product order —
+    the last node's candidate varies fastest) as a (len(flat_idx), n) rate
+    matrix."""
+    sizes = [p.size for p in per_node]
+    multi = np.unravel_index(flat_idx, sizes)      # C order == product order
+    rates = np.empty((flat_idx.size, len(per_node)))
+    for i, p in enumerate(per_node):
+        rates[:, i] = p[multi[i]]
+    return rates
+
+
 def solve_bruteforce(
+    capacity: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    reception_based: bool = False,
+    max_nodes: int = 8,
+    chunk: int = 4096,
+    backend: Literal["numpy", "jax"] = "numpy",
+) -> RateSolution:
+    """Algorithm 2, batched: enumerate every per-row capacity pick as one
+    (B, n) rate matrix, rank all combos by their (cheap) Eq. 3 time, then
+    run the batched lambda pass over chunks in ascending-time order and stop
+    at the first feasible combo — which is exactly the reference answer
+    (min t_com among feasible; equal-t ties resolved in product order by the
+    stable sort). Worst case (no feasible combo) evaluates the full grid,
+    still as ~B/chunk batched eig calls instead of B Python loops.
+    """
+    n = capacity.shape[0]
+    if n > max_nodes:
+        raise ValueError(f"brute force capped at n={max_nodes}; use solve() for n={n}")
+    per_node = _per_node_candidates(capacity)
+    total = int(np.prod([p.size for p in per_node]))
+
+    t_all = np.empty(total)
+    for start in range(0, total, chunk):
+        idx = np.arange(start, min(start + chunk, total))
+        t_all[idx] = tdm_time_batch_s(model_bits, _combo_rates(per_node, idx))
+    order = np.argsort(t_all, kind="stable")
+
+    for start in range(0, total, chunk):
+        idx = order[start:start + chunk]
+        rates = _combo_rates(per_node, idx)
+        _, _, feas = evaluate_rates_batch(
+            capacity, rates, model_bits, lambda_target, reception_based,
+            backend=backend)
+        hits = np.flatnonzero(feas)
+        if hits.size:
+            return _evaluate(capacity, rates[hits[0]], model_bits,
+                             lambda_target, reception_based)
+    # even the densest topology misses the target
+    rates = np.array([per_node[i][-1] for i in range(n)])
+    return _evaluate(capacity, rates, model_bits, lambda_target, reception_based)
+
+
+def solve_common_rate(
+    capacity: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    reception_based: bool = False,
+) -> RateSolution:
+    """All nodes share a single rate: evaluate every distinct capacity in one
+    batched pass and return the fastest feasible one (the reference scans
+    descending and stops at the first feasible — same pick)."""
+    vals = np.unique(capacity[np.isfinite(capacity) & (capacity > 0)])[::-1]
+    if not vals.size:
+        raise ValueError("capacity matrix has no positive finite entries")
+    n = capacity.shape[0]
+    rates = np.repeat(vals[:, None], n, axis=1)          # (V, n), descending
+    _, _, feas = evaluate_rates_batch(capacity, rates, model_bits,
+                                      lambda_target, reception_based)
+    k = int(np.argmax(feas)) if feas.any() else vals.size - 1
+    return _evaluate(capacity, np.full(n, vals[k]), model_bits, lambda_target,
+                     reception_based)
+
+
+def solve_k_nearest(
+    capacity: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    reception_based: bool = False,
+) -> RateSolution:
+    """R_i = capacity to node i's k-th best neighbor; the whole k = 1..n-1
+    sweep is evaluated as one batch and the best feasible k wins (ties to
+    the smallest k, matching the reference's ascending scan)."""
+    n = capacity.shape[0]
+    per_node = _per_node_candidates(capacity)
+    rows = []
+    for i in range(n):
+        row = np.sort(capacity[i][np.isfinite(capacity[i])
+                                  & (capacity[i] > 0)])[::-1]
+        rows.append(row)
+    rates = np.empty((n - 1, n))
+    for k in range(1, n):
+        for i in range(n):
+            rates[k - 1, i] = rows[i][min(k - 1, rows[i].size - 1)] \
+                if rows[i].size else per_node[i][0]
+    t, _, feas = evaluate_rates_batch(capacity, rates, model_bits,
+                                      lambda_target, reception_based)
+    if feas.any():
+        k = int(np.argmin(np.where(feas, t, np.inf)))
+    else:
+        k = n - 2                        # the last (densest) attempt, like worst
+    return _evaluate(capacity, rates[k], model_bits, lambda_target,
+                     reception_based)
+
+
+def solve_greedy(
+    capacity: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    reception_based: bool = False,
+    max_iters: int = 10_000,
+) -> RateSolution:
+    """Start dense (every node at its minimum row capacity => maximal
+    connectivity) and greedily raise one node's rate to its next candidate.
+    All <= n single-raises of an iteration are scored in one batched pass;
+    the pick (best strict t_com improvement that stays feasible, ties to the
+    lowest node index) matches the reference's sequential scan."""
+    n = capacity.shape[0]
+    per_node = _per_node_candidates(capacity)  # descending
+    idx = np.array([len(per_node[i]) - 1 for i in range(n)])     # start = slowest/densest
+    rates = np.array([per_node[i][idx[i]] for i in range(n)])
+    cur = _evaluate(capacity, rates, model_bits, lambda_target, reception_based)
+    if not cur.feasible:
+        return cur
+    for _ in range(max_iters):
+        movable = np.flatnonzero(idx > 0)
+        if not movable.size:
+            break
+        trials = np.repeat(rates[None, :], movable.size, axis=0)
+        for r, i in enumerate(movable):
+            trials[r, i] = per_node[i][idx[i] - 1]
+        t, _, feas = evaluate_rates_batch(capacity, trials, model_bits,
+                                          lambda_target, reception_based)
+        ok = feas & (t < cur.t_com_s - 1e-15)
+        if not ok.any():
+            break
+        r = int(np.argmin(np.where(ok, t, np.inf)))
+        i = int(movable[r])
+        idx[i] -= 1
+        cur = _evaluate(capacity, trials[r], model_bits, lambda_target,
+                        reception_based)
+        rates = cur.rates_bps
+    return cur
+
+
+# ---------------------------------------------------------------------------
+# Pinned sequential references (pre-vectorization implementations, verbatim).
+# The batched solvers above must match these bit-for-bit on the numpy
+# backend; tests/test_vectorized.py and benchmarks/bench_sim.py enforce it.
+# ---------------------------------------------------------------------------
+
+def solve_bruteforce_reference(
     capacity: np.ndarray,
     model_bits: float,
     lambda_target: float,
@@ -111,14 +357,13 @@ def solve_bruteforce(
     return best
 
 
-def solve_common_rate(
+def solve_common_rate_reference(
     capacity: np.ndarray,
     model_bits: float,
     lambda_target: float,
     reception_based: bool = False,
 ) -> RateSolution:
-    """All nodes share a single rate: scan distinct capacities descending and
-    return the fastest feasible one. O(n^2) candidates x O(n^3) eig."""
+    """Scan distinct common rates descending, one eig per candidate."""
     vals = np.unique(capacity[np.isfinite(capacity) & (capacity > 0)])[::-1]
     if not vals.size:
         raise ValueError("capacity matrix has no positive finite entries")
@@ -132,17 +377,13 @@ def solve_common_rate(
     return best  # densest (slowest) attempt, infeasible
 
 
-def solve_k_nearest(
+def solve_k_nearest_reference(
     capacity: np.ndarray,
     model_bits: float,
     lambda_target: float,
     reception_based: bool = False,
 ) -> RateSolution:
-    """R_i = capacity to node i's k-th best neighbor; sweep k = 1..n-1
-    ascending and return the first feasible (sparsest-but-feasible would be
-    k minimal; since t_com decreases with fewer/slower... note per-node rates
-    *rise* as k shrinks, so small k = fast). Returns the best feasible over
-    the sweep."""
+    """Sweep k = 1..n-1 one candidate at a time."""
     n = capacity.shape[0]
     best: Optional[RateSolution] = None
     worst: Optional[RateSolution] = None
@@ -161,17 +402,14 @@ def solve_k_nearest(
     return best if best is not None else worst
 
 
-def solve_greedy(
+def solve_greedy_reference(
     capacity: np.ndarray,
     model_bits: float,
     lambda_target: float,
     reception_based: bool = False,
     max_iters: int = 10_000,
 ) -> RateSolution:
-    """Start dense (every node at its minimum row capacity => maximal
-    connectivity) and greedily raise one node's rate to its next candidate,
-    picking the raise with the best t_com improvement that stays feasible.
-    Terminates when no single raise is feasible."""
+    """Greedy single-raise search, one eig per trial."""
     n = capacity.shape[0]
     per_node = _per_node_candidates(capacity)  # descending
     idx = np.array([len(per_node[i]) - 1 for i in range(n)])     # start = slowest/densest
@@ -203,6 +441,10 @@ _SOLVERS: dict[str, Callable[..., RateSolution]] = {
     "common_rate": solve_common_rate,
     "k_nearest": solve_k_nearest,
     "greedy": solve_greedy,
+    "bruteforce_reference": solve_bruteforce_reference,
+    "common_rate_reference": solve_common_rate_reference,
+    "k_nearest_reference": solve_k_nearest_reference,
+    "greedy_reference": solve_greedy_reference,
 }
 
 
@@ -210,18 +452,24 @@ def solve(
     capacity: np.ndarray,
     model_bits: float,
     lambda_target: float,
-    method: Literal["auto", "bruteforce", "common_rate", "k_nearest", "greedy"] = "auto",
+    method: str = "auto",
     reception_based: bool = False,
 ) -> RateSolution:
     """Front door. ``auto`` = brute force up to n=7 (exact, like the paper),
-    else best-of(greedy, k_nearest, common_rate)."""
+    else best-of(greedy, k_nearest, common_rate). ``auto_reference`` runs
+    the same dispatch over the pinned sequential solvers (benchmarking)."""
     n = capacity.shape[0]
-    if method == "auto":
+    if method in ("auto", "auto_reference"):
+        ref = method == "auto_reference"
         if n <= 7:
-            return solve_bruteforce(capacity, model_bits, lambda_target,
-                                    reception_based=reception_based)
+            bf = solve_bruteforce_reference if ref else solve_bruteforce
+            return bf(capacity, model_bits, lambda_target,
+                      reception_based=reception_based)
+        trio = (solve_greedy_reference, solve_k_nearest_reference,
+                solve_common_rate_reference) if ref else \
+               (solve_greedy, solve_k_nearest, solve_common_rate)
         sols = [f(capacity, model_bits, lambda_target, reception_based=reception_based)
-                for f in (solve_greedy, solve_k_nearest, solve_common_rate)]
+                for f in trio]
         feasible = [s for s in sols if s.feasible]
         pool = feasible if feasible else sols
         return min(pool, key=lambda s: s.t_com_s)

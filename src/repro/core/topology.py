@@ -24,10 +24,12 @@ import numpy as np
 
 __all__ = [
     "adjacency_from_rates",
+    "adjacency_from_rates_batch",
     "paper_w",
     "metropolis_w",
     "fully_connected_w",
     "spectral_lambda",
+    "spectral_lambda_batch",
     "is_connected",
     "ring_adjacency",
     "torus_adjacency",
@@ -63,10 +65,33 @@ def adjacency_from_rates(
     return a
 
 
+def adjacency_from_rates_batch(
+    capacity: np.ndarray,
+    rates: np.ndarray,
+    reception_based: bool = False,
+) -> np.ndarray:
+    """Batched Eq. 4 connectivity: ``rates`` (B, n) -> (B, n, n) stack.
+
+    Row b equals ``adjacency_from_rates(capacity, rates[b])`` exactly — the
+    same elementwise comparison evaluated for every candidate at once.
+    """
+    capacity = np.asarray(capacity, dtype=np.float64)
+    rates = np.atleast_2d(np.asarray(rates, dtype=np.float64))
+    if reception_based:
+        a = (capacity[None, :, :] >= rates[:, None, :]).astype(np.float64)
+    else:
+        a = (capacity[None, :, :] >= rates[:, :, None]).astype(np.float64)
+    n = capacity.shape[0]
+    a[:, np.arange(n), np.arange(n)] = 1.0
+    return a
+
+
 def paper_w(adjacency: np.ndarray) -> np.ndarray:
-    """Row-stochastic W_ij = A_ij / sum_j A_ij (Eq. 4). Satisfies W 1 = 1."""
+    """Row-stochastic W_ij = A_ij / sum_j A_ij (Eq. 4). Satisfies W 1 = 1.
+
+    Accepts a single (n, n) adjacency or a batched (B, n, n) stack."""
     a = np.asarray(adjacency, dtype=np.float64)
-    return a / a.sum(axis=1, keepdims=True)
+    return a / a.sum(axis=-1, keepdims=True)
 
 
 def metropolis_w(adjacency: np.ndarray) -> np.ndarray:
@@ -120,6 +145,34 @@ def spectral_lambda(w: np.ndarray) -> float:
     drop = int(np.argmin(np.abs(eig - 1.0)))
     mags = np.delete(mags, drop)
     return float(mags.max()) if mags.size else 0.0
+
+
+def spectral_lambda_batch(w: np.ndarray) -> np.ndarray:
+    """``spectral_lambda`` over a (B, n, n) stack, one batched eig pass.
+
+    Per-item results are bit-identical to the scalar function: the same
+    symmetric/asymmetric dispatch (numpy ``allclose`` semantics) routes each
+    matrix to the same LAPACK kernel, which the gufunc applies per matrix;
+    the drop-the-Perron-eigenvalue bookkeeping is done with masked maxima
+    instead of ``np.delete``.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    if w.ndim == 2:
+        w = w[None]
+    b, n = w.shape[0], w.shape[-1]
+    out = np.zeros(b)
+    if n <= 1 or b == 0:
+        return out
+    sym = np.isclose(w, np.swapaxes(w, -1, -2)).all(axis=(-1, -2))
+    for mask, eigf in ((sym, np.linalg.eigvalsh), (~sym, np.linalg.eigvals)):
+        if not mask.any():
+            continue
+        eig = eigf(w[mask])                       # (m, n) real or complex
+        mags = np.abs(eig)
+        drop = np.argmin(np.abs(eig - 1.0), axis=1)  # first min, like argmin
+        mags[np.arange(mags.shape[0]), drop] = -np.inf
+        out[mask] = mags.max(axis=1)
+    return out
 
 
 def is_connected(adjacency: np.ndarray) -> bool:

@@ -9,6 +9,10 @@ stacked input tiles resident in VMEM — one HBM read per operand, one write.
 Tiling: buffers are viewed as (K, N); each grid step owns an (K, bn) tile
 with bn = 8*128*8 lanes (VPU-aligned, fp32). K = degree+1 <= 9 is static and
 unrolled. Accumulation is fp32 regardless of payload dtype.
+
+Execution mode: ``interpret=None`` (the default) auto-selects — compiled
+Pallas when a TPU backend is attached, interpret mode otherwise (CPU/GPU
+CI, unit tests). Pass an explicit bool to override.
 """
 from __future__ import annotations
 
@@ -23,6 +27,16 @@ __all__ = ["gossip_mix"]
 _BN = 8 * 128 * 8  # lanes per tile (fp32 VPU tile x 8 rows)
 
 
+@functools.cache
+def _default_interpret() -> bool:
+    """Compiled kernels only make sense on a real TPU backend; everywhere
+    else (CPU CI, GPU hosts) fall back to interpret mode."""
+    try:
+        return jax.default_backend() != "tpu"
+    except Exception:
+        return True
+
+
 def _kernel(w_ref, b_ref, o_ref):
     k = b_ref.shape[0]
     acc = jnp.zeros(o_ref.shape, jnp.float32)
@@ -33,8 +47,11 @@ def _kernel(w_ref, b_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def gossip_mix(bufs: jax.Array, weights: jax.Array,
-               interpret: bool = True) -> jax.Array:
-    """bufs (K, N), weights (K,) -> (N,). N padded to the tile size."""
+               interpret: bool | None = None) -> jax.Array:
+    """bufs (K, N), weights (K,) -> (N,). N padded to the tile size.
+    ``interpret=None`` auto-selects compiled execution on TPU."""
+    if interpret is None:
+        interpret = _default_interpret()
     k, n = bufs.shape
     pad = (-n) % _BN
     if pad:

@@ -22,8 +22,9 @@ __all__ = ["gossip_mix", "flash_attention_gqa", "rwkv6", "rglru",
 
 
 def gossip_mix(bufs: jax.Array, weights: jax.Array,
-               interpret: bool = True) -> jax.Array:
-    """bufs (K, N) stacked self+neighbor payloads, weights (K,) -> (N,)."""
+               interpret: bool | None = None) -> jax.Array:
+    """bufs (K, N) stacked self+neighbor payloads, weights (K,) -> (N,).
+    ``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere."""
     return _gm.gossip_mix(bufs, weights, interpret=interpret)
 
 

@@ -20,22 +20,22 @@ Modules:
 """
 from .events import Event, EventKind, EventQueue, SimClock
 from .fading import FadingChannel, FadingParams
-from .mac import MacParams, RoundResult, tdm_round
+from .mac import MacParams, RoundResult, tdm_round, tdm_round_reference
 from .mobility import (ClusterMobility, PoissonChurn, RandomWaypoint,
                        StaticMobility, make_mobility)
 from .scenario import (DEFAULT_MODEL_BITS, ScenarioConfig, get_scenario,
                        list_scenarios, register)
 from .trace import (RoundContext, RoundRecord, SimTrace, WirelessSimulator,
-                    simulate_dpsgd_cnn)
+                    simulate_dpsgd_cnn, sweep)
 
 __all__ = [
     "Event", "EventKind", "EventQueue", "SimClock",
     "FadingChannel", "FadingParams",
-    "MacParams", "RoundResult", "tdm_round",
+    "MacParams", "RoundResult", "tdm_round", "tdm_round_reference",
     "ClusterMobility", "PoissonChurn", "RandomWaypoint", "StaticMobility",
     "make_mobility",
     "DEFAULT_MODEL_BITS", "ScenarioConfig", "get_scenario", "list_scenarios",
     "register",
     "RoundContext", "RoundRecord", "SimTrace", "WirelessSimulator",
-    "simulate_dpsgd_cnn",
+    "simulate_dpsgd_cnn", "sweep",
 ]

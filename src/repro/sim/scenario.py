@@ -69,6 +69,7 @@ class ScenarioConfig:
     churn_rate_per_s: float = 0.0
     # link layer
     mac: MacParams = dataclasses.field(default_factory=MacParams)
+    reference_mac: bool = False        # pinned per-packet loop MAC (benchmarks)
     # replan policy (Algorithm 2 re-runs)
     solver: str = "auto"               # rate_opt.solve method (auto = exact)
     replan_every_rounds: int = 0       # 0 = never on a schedule

@@ -38,12 +38,12 @@ from ..core.topology import adjacency_from_rates, spectral_lambda
 from ..runtime.fault import ElasticController
 from .events import EventKind, EventQueue, SimClock
 from .fading import FadingChannel
-from .mac import RoundResult, tdm_round
+from .mac import RoundResult, tdm_round, tdm_round_reference
 from .mobility import PoissonChurn, make_mobility
-from .scenario import ScenarioConfig
+from .scenario import ScenarioConfig, get_scenario
 
 __all__ = ["RoundRecord", "SimTrace", "RoundContext", "WirelessSimulator",
-           "simulate_dpsgd_cnn"]
+           "simulate_dpsgd_cnn", "sweep"]
 
 
 @dataclasses.dataclass
@@ -224,10 +224,21 @@ class WirelessSimulator:
 
         pos_round = self._positions()
         self._cap_cache = None
-        result = tdm_round(
-            self.clock, self.solution.rates_bps, self._intended,
-            cfg.model_bits, lambda t: self._capacity_at(pos_round, t),
-            cfg.mac)
+        if cfg.reference_mac:
+            result = tdm_round_reference(
+                self.clock, self.solution.rates_bps, self._intended,
+                cfg.model_bits, lambda t: self._capacity_at(pos_round, t),
+                cfg.mac)
+        else:
+            result = tdm_round(
+                self.clock, self.solution.rates_bps, self._intended,
+                cfg.model_bits, lambda t: self._capacity_at(pos_round, t),
+                cfg.mac,
+                block_index=self.channel.block_indices,
+                capacity_at_times=lambda ts: self.channel.capacity_at_times(
+                    pos_round, ts),
+                decode_ok_at_times=lambda ts, i, rate:
+                    self.channel.decode_ok_at_times(pos_round, ts, i, rate))
         w_eff = result.effective_w()
 
         metrics: dict = {}
@@ -292,6 +303,32 @@ class WirelessSimulator:
             scenario=self.cfg.name, records=records, replans=self.replans,
             failures=list(self.failures), t_end_s=self.clock.now,
             events_processed=self.queue.processed)
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo sweeps
+# ---------------------------------------------------------------------------
+
+def sweep(
+    configs,
+    n_rounds: int,
+    driver: Optional[Driver] = None,
+) -> list[SimTrace]:
+    """Run a batch of scenarios through the vectorized plane.
+
+    ``configs`` is a sequence of ``ScenarioConfig`` objects or registered
+    scenario names; each runs for ``n_rounds`` mixing rounds and yields one
+    ``SimTrace``, in order. Identical placements hit the solver's memoized
+    candidate enumeration, so multi-seed sweeps over one topology only pay
+    Algorithm 2's combinatorics once per distinct capacity matrix. This is
+    the driver ``benchmarks/bench_sim.py`` tracks (rounds/s, packets/s).
+    """
+    traces: list[SimTrace] = []
+    for cfg in configs:
+        if isinstance(cfg, str):
+            cfg = get_scenario(cfg)
+        traces.append(WirelessSimulator(cfg).run(n_rounds, driver))
+    return traces
 
 
 # ---------------------------------------------------------------------------

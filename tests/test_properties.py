@@ -110,3 +110,22 @@ def test_comm_time_additive_in_nodes(n):
     from repro.core.comm_model import tdm_time_s
     rates = np.full(n, 1e6)
     assert tdm_time_s(1e6, rates) == pytest.approx(n * 1.0)
+
+
+@SET
+@given(placements(), st.floats(1e5, 1e8), st.integers(0, 1000))
+def test_batched_lambda_and_time_bitwise_match_scalar(cap, rate, seed):
+    """The vectorized wireless plane is pinned to the scalar one exactly:
+    per-candidate lambda and Eq. 3 time must be bit-identical, not close."""
+    from repro.core.comm_model import tdm_time_batch_s, tdm_time_s
+    n = cap.shape[0]
+    rng = np.random.default_rng(seed)
+    rates = np.vstack([np.full(n, rate), rng.uniform(1e5, 1e8, size=(4, n))])
+    ws = topology.paper_w(topology.adjacency_from_rates_batch(cap, rates))
+    lams = topology.spectral_lambda_batch(ws)
+    ts = tdm_time_batch_s(698880.0, rates)
+    for b in range(rates.shape[0]):
+        w = topology.paper_w(topology.adjacency_from_rates(cap, rates[b]))
+        np.testing.assert_array_equal(ws[b], w)
+        assert lams[b] == topology.spectral_lambda(w)
+        assert ts[b] == tdm_time_s(698880.0, rates[b])

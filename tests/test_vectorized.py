@@ -1,0 +1,227 @@
+"""Vectorized wireless plane vs pinned scalar references.
+
+Everything here asserts *exact* (bit-identical) agreement, not closeness:
+the batched solvers route each candidate through the same LAPACK kernels as
+the sequential originals, and the vectorized MAC performs the identical
+chain of float64 clock additions — so `==` is the contract, and any drift
+is a bug.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import channel, rate_opt
+from repro.core.comm_model import tdm_time_batch_s, tdm_time_s
+from repro.core.topology import (adjacency_from_rates,
+                                 adjacency_from_rates_batch, metropolis_w,
+                                 paper_w, ring_adjacency, spectral_lambda,
+                                 spectral_lambda_batch)
+from repro.sim import (FadingChannel, FadingParams, MacParams, SimClock,
+                       WirelessSimulator, get_scenario, sweep, tdm_round,
+                       tdm_round_reference)
+
+M_BITS = 698_880.0
+
+
+def _cap(n, seed, eps=4.0, margin=0.0):
+    pos = channel.random_placement(n, 200.0, seed=seed)
+    return channel.capacity_matrix(
+        pos, channel.ChannelParams(path_loss_exp=eps,
+                                   fading_margin_bps=margin))
+
+
+# ---------------------------------------------------------------------------
+# Batched primitives == scalar primitives
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_spectral_lambda_batch_matches_scalar(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 9))
+    ws = []
+    for k in range(8):
+        a = (rng.random((n, n)) < 0.5).astype(np.float64)
+        np.fill_diagonal(a, 1.0)
+        ws.append(paper_w(a))
+    ws.append(metropolis_w(ring_adjacency(n, 1)))   # symmetric branch
+    batch = spectral_lambda_batch(np.stack(ws))
+    for w, lam in zip(ws, batch):
+        assert lam == spectral_lambda(w)            # bit-identical
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_adjacency_and_tdm_time_batch_match_scalar(seed):
+    rng = np.random.default_rng(100 + seed)
+    cap = _cap(6, seed)
+    rates = rng.uniform(1e5, 1e8, size=(16, 6))
+    for rb in (False, True):
+        batch = adjacency_from_rates_batch(cap, rates, reception_based=rb)
+        for b in range(rates.shape[0]):
+            np.testing.assert_array_equal(
+                batch[b], adjacency_from_rates(cap, rates[b],
+                                               reception_based=rb))
+    t = tdm_time_batch_s(M_BITS, rates)
+    for b in range(rates.shape[0]):
+        assert t[b] == tdm_time_s(M_BITS, rates[b])
+
+
+# ---------------------------------------------------------------------------
+# Batched solvers == sequential references
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["bruteforce", "common_rate", "k_nearest",
+                                    "greedy"])
+@pytest.mark.parametrize("seed,n,eps,margin", [
+    (0, 5, 4.0, 0.0), (1, 4, 5.5, 0.0), (2, 6, 3.0, 0.0),
+    (3, 5, 5.0, 2e6),                 # margin clips links to zero capacity
+])
+def test_batched_solvers_match_references(method, seed, n, eps, margin):
+    cap = _cap(n, seed, eps, margin)
+    for lam_t in (0.25, 0.6, 0.9, -1.0):   # -1: infeasible fallback path
+        fast = rate_opt._SOLVERS[method](cap, M_BITS, lam_t)
+        ref = rate_opt._SOLVERS[method + "_reference"](cap, M_BITS, lam_t)
+        np.testing.assert_array_equal(fast.rates_bps, ref.rates_bps)
+        assert fast.t_com_s == ref.t_com_s
+        assert fast.lam == ref.lam
+        assert fast.feasible == ref.feasible
+        np.testing.assert_array_equal(fast.w, ref.w)
+
+
+def test_candidate_memoization_hits_and_stays_correct():
+    cap = _cap(5, 11)
+    rate_opt.clear_candidate_cache()
+    a = rate_opt._per_node_candidates(cap)
+    b = rate_opt._per_node_candidates(cap.copy())   # same content, new array
+    assert a is b                                   # memoized
+    for i in range(5):
+        np.testing.assert_array_equal(a[i], rate_opt.candidate_rates(cap, i))
+    # a different matrix must not collide
+    c = rate_opt._per_node_candidates(_cap(5, 12))
+    assert c is not a
+
+
+# ---------------------------------------------------------------------------
+# Vectorized MAC == per-packet reference
+# ---------------------------------------------------------------------------
+
+def _compare_rounds(rates, intended, model_bits, mac, cap_fn_a, cap_fn_b,
+                    **fast_kw):
+    clock_a, clock_b = SimClock(), SimClock()
+    fast = tdm_round(clock_a, rates, intended, model_bits, cap_fn_a, mac,
+                     **fast_kw)
+    ref = tdm_round_reference(clock_b, rates, intended, model_bits, cap_fn_b,
+                              mac)
+    assert clock_a.now == clock_b.now                       # bit-identical
+    assert fast.duration_s == ref.duration_s
+    np.testing.assert_array_equal(fast.delivered, ref.delivered)
+    np.testing.assert_array_equal(fast.intended, ref.intended)
+    assert fast.packets_first_pass == ref.packets_first_pass
+    assert fast.retx_packets == ref.retx_packets
+    assert fast.outage_links == ref.outage_links
+    np.testing.assert_array_equal(fast.effective_w(), ref.effective_w())
+    return fast
+
+
+def test_tdm_round_static_matches_reference_and_eq3():
+    cap = _cap(6, 0, 5.0)
+    sol = rate_opt.solve(cap, M_BITS, 0.4)
+    intended = adjacency_from_rates(cap, sol.rates_bps).astype(bool)
+    fast = _compare_rounds(sol.rates_bps, intended, M_BITS, MacParams(),
+                           lambda t: cap, lambda t: cap)
+    assert abs(fast.duration_s - sol.t_com_s) / sol.t_com_s < 1e-9  # Eq. 3
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_tdm_round_fading_retx_matches_reference(seed):
+    """Fading + retransmission: the vectorized pass bookkeeping and the
+    per-packet dict/set loop resolve every outage identically (two separate
+    FadingChannel instances guarantee identical channel streams)."""
+    pos = channel.random_placement(5, 200.0, seed=seed)
+    params = channel.ChannelParams(path_loss_exp=5.0, fading_margin_bps=1e6)
+    fparams = FadingParams(rayleigh=True, shadowing_sigma_db=3.0,
+                           coherence_s=0.01, seed=seed)
+    ch_fast, ch_ref = (FadingChannel(params, fparams) for _ in range(2))
+    cap = ch_fast.mean_capacity(pos)
+    sol = rate_opt.solve(cap, M_BITS, 0.6)
+    intended = adjacency_from_rates(cap, sol.rates_bps).astype(bool)
+    mac = MacParams(max_retx_rounds=3)
+    fast = _compare_rounds(
+        sol.rates_bps, intended, M_BITS, mac,
+        lambda t: ch_fast.capacity_at(pos, t),
+        lambda t: ch_ref.capacity_at(pos, t),
+        block_index=ch_fast.block_indices,
+        capacity_at_times=lambda ts: ch_fast.capacity_at_times(pos, ts))
+    assert fast.retx_packets > 0        # the scenario actually exercised ARQ
+
+
+def test_simulator_fast_and_reference_mac_agree_end_to_end():
+    for name in ("static", "fading", "mixed"):
+        tf = WirelessSimulator(get_scenario(name, solver="greedy")).run(6)
+        tr = WirelessSimulator(get_scenario(name, solver="greedy",
+                                            reference_mac=True)).run(6)
+        assert tf.total_comm_s == tr.total_comm_s
+        for a, b in zip(tf.records, tr.records):
+            assert (a.t_comm_s, a.retx_packets, a.outage_links,
+                    a.delivered_frac, a.lam_effective) == \
+                   (b.t_comm_s, b.retx_packets, b.outage_links,
+                    b.delivered_frac, b.lam_effective)
+
+
+# ---------------------------------------------------------------------------
+# Sweep driver
+# ---------------------------------------------------------------------------
+
+def test_sweep_runs_multi_seed_and_multi_scenario():
+    configs = ["static",
+               get_scenario("static", seed=1),
+               get_scenario("fading", seed=2, solver="greedy")]
+    traces = sweep(configs, n_rounds=3)
+    assert [t.scenario for t in traces] == ["static", "static", "fading"]
+    assert all(len(t.records) == 3 for t in traces)
+    # multi-seed static runs see different placements => different airtime
+    assert traces[0].total_comm_s != traces[1].total_comm_s
+
+
+# ---------------------------------------------------------------------------
+# Chunked fading scheme invariants
+# ---------------------------------------------------------------------------
+
+def test_chunked_fading_deterministic_and_scheme_gated():
+    pos = channel.random_placement(5, 200.0, seed=3)
+    params = channel.ChannelParams(path_loss_exp=5.0)
+    f = FadingParams(coherence_s=0.01, shadowing_sigma_db=3.0, seed=7)
+    a = FadingChannel(params, f).capacity_at_times(pos, np.array([0.005, 0.1]))
+    b = FadingChannel(params, f).capacity_at_times(pos, np.array([0.005, 0.1]))
+    np.testing.assert_array_equal(a, b)
+    # scalar fetches are one-element slices of the batched path
+    c = FadingChannel(params, f)
+    np.testing.assert_array_equal(c.capacity_at(pos, 0.005), a[0])
+    np.testing.assert_array_equal(c.capacity_at(pos, 0.1), a[1])
+    # the legacy per-block scheme is a different (pinned) stream
+    legacy = dataclasses.replace(f, rng_scheme="per_block")
+    d = FadingChannel(params, legacy).capacity_at(pos, 0.005)
+    off = ~np.eye(5, dtype=bool)
+    assert not np.allclose(a[0][off], d[off])
+    np.testing.assert_allclose(d[off].reshape(5, 4), d.T[off].reshape(5, 4))
+
+
+def test_chunked_fading_rewind_invalidates_derived_tables():
+    """A backward jump past the chunk cache restarts the AR(1) stream; the
+    capacity/decode tables derived from the old stream must go with it, so
+    identical query sequences stay identical (tiny block_chunk forces
+    eviction)."""
+    pos = channel.random_placement(4, 200.0, seed=5)
+    params = channel.ChannelParams(path_loss_exp=5.0)
+    f = FadingParams(coherence_s=0.01, shadowing_sigma_db=3.0, seed=1,
+                     block_chunk=4)
+    ch = FadingChannel(params, f)
+    t_late = 6 * 4 * 0.01 + 0.005          # lands in chunk 6
+    ch.capacity_at(pos, t_late)
+    ch.capacity_at(pos, 0.005)             # rewind past the cache -> restart
+    b = ch.capacity_at(pos, t_late)
+    ch.capacity_at(pos, 0.005)             # identical rewind sequence again
+    c = ch.capacity_at(pos, t_late)
+    np.testing.assert_array_equal(b, c)
+    ok = ch.decode_ok_at_times(pos, np.array([t_late]), 0, 1e6)[0]
+    np.testing.assert_array_equal(ok, c[0] >= 1e6)
