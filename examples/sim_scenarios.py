@@ -14,18 +14,24 @@ Three demos, all on the paper's setup (n=6 nodes, 200 m square, the
 3. ``--margin-sweep`` — sweep ``fading_margin_bps`` under the fading
    scenario: the §II-B margin becomes a real dial between outage rate
    (too little headroom) and airtime (too much).
+4. ``--train-sweep SCENARIO --seeds N`` — the train-on-trace plane: channel
+   realizations for N seeds precomputed driver-less, then the whole
+   Monte-Carlo family trained in ONE jitted scan/vmap call
+   (``sim.batch.train_cnn_on_traces``); prints the per-seed
+   accuracy-vs-simulated-time curves.
 
 Usage:
     PYTHONPATH=src python -m examples.sim_scenarios
     PYTHONPATH=src python -m examples.sim_scenarios --train fading
     PYTHONPATH=src python -m examples.sim_scenarios --margin-sweep
+    PYTHONPATH=src python -m examples.sim_scenarios --train-sweep fading --seeds 4
 """
 from __future__ import annotations
 
 import argparse
 
 from repro.sim import (WirelessSimulator, get_scenario, list_scenarios,
-                       simulate_dpsgd_cnn)
+                       simulate_dpsgd_cnn, train_cnn_on_traces)
 
 
 def compare(rounds: int, solver: str) -> None:
@@ -54,6 +60,27 @@ def train(name: str, epochs: int, solver: str) -> None:
         print(f"{t:.2f},{acc:.4f}")
 
 
+def train_sweep(name: str, seeds: int, epochs: int, solver: str) -> None:
+    """Monte-Carlo accuracy-vs-simulated-time family from one compiled call."""
+    import time
+
+    cfgs = [get_scenario(name, seed=s, solver=solver, eval_every_rounds=2)
+            for s in range(seeds)]
+    t0 = time.perf_counter()
+    traces, out = train_cnn_on_traces(cfgs, epochs=epochs, n_train=600,
+                                      n_test=300)
+    dt = time.perf_counter() - t0
+    print(f"# {name}: {seeds} seeds x {traces.n_rounds} rounds in {dt:.2f}s "
+          f"wall (one scan/vmap call)")
+    print("seed,t_sim_s,accuracy")
+    for s, curve in enumerate(out["curves"]):
+        for t, acc in curve:
+            print(f"{s},{t:.2f},{acc:.4f}")
+    final = out["acc"][:, -1]
+    print(f"# final accuracy over seeds: mean {final.mean():.4f} "
+          f"min {final.min():.4f} max {final.max():.4f}")
+
+
 def margin_sweep(rounds: int, solver: str) -> None:
     print("fading_margin_bps,feasible,outage_rate,retx_packets,comm_s")
     for margin in (0.0, 5e5, 1e6, 2e6, 3e6, 4e6):
@@ -72,14 +99,21 @@ def main(argv: list[str] | None = None) -> None:
     mode.add_argument("--compare", action="store_true",
                       help="scenario comparison table (default)")
     mode.add_argument("--train", metavar="SCENARIO", choices=list_scenarios())
+    mode.add_argument("--train-sweep", metavar="SCENARIO",
+                      choices=list_scenarios(),
+                      help="Monte-Carlo family via the batched scan path")
     mode.add_argument("--margin-sweep", action="store_true")
     p.add_argument("--rounds", type=int, default=20)
     p.add_argument("--epochs", type=int, default=2)
+    p.add_argument("--seeds", type=int, default=4,
+                   help="channel seeds for --train-sweep")
     p.add_argument("--solver", default="greedy",
                    help="rate_opt method for (re)plans; 'auto' = exact")
     args = p.parse_args(argv)
     if args.train:
         train(args.train, args.epochs, args.solver)
+    elif args.train_sweep:
+        train_sweep(args.train_sweep, args.seeds, args.epochs, args.solver)
     elif args.margin_sweep:
         margin_sweep(args.rounds, args.solver)
     else:

@@ -1,3 +1,5 @@
-from .ckpt import CheckpointManager, restore, save
+from .ckpt import (CheckpointManager, compact_nodes, expand_nodes,
+                   reshape_nodes, restore, save)
 
-__all__ = ["CheckpointManager", "save", "restore"]
+__all__ = ["CheckpointManager", "save", "restore", "reshape_nodes",
+           "compact_nodes", "expand_nodes"]

@@ -26,7 +26,8 @@ import numpy as np
 
 PyTree = Any
 
-__all__ = ["save", "restore", "CheckpointManager", "reshape_nodes"]
+__all__ = ["save", "restore", "CheckpointManager", "reshape_nodes",
+           "compact_nodes", "expand_nodes"]
 
 
 def _flatten(state: PyTree) -> tuple[list[np.ndarray], Any]:
@@ -116,6 +117,37 @@ def reshape_nodes(state: PyTree, survivors: list[int], n_new: int) -> PyTree:
                            .astype(kept_np.dtype))
         extra = jnp.broadcast_to(fill, (n_new - kept.shape[0], *kept.shape[1:]))
         return jnp.concatenate([kept, extra], axis=0)
+    return jax.tree.map(fix, state)
+
+
+def compact_nodes(state: PyTree, live: np.ndarray) -> PyTree:
+    """Masked fixed-width state -> compacted state: keep live node rows, in
+    original-id order. The inverse (for live rows) of ``expand_nodes``; used
+    to checkpoint or hand off the result of the masked scan path
+    (``sim.batch``) in the same layout the per-round driver produces."""
+    idx = np.flatnonzero(np.asarray(live, dtype=bool))
+    return jax.tree.map(
+        lambda leaf: leaf if leaf.ndim == 0 else leaf[idx], state)
+
+
+def expand_nodes(state: PyTree, survivors: list[int], n_total: int) -> PyTree:
+    """Compacted state -> masked fixed-width state: scatter node row ``k`` to
+    row ``survivors[k]`` of an ``n_total``-wide state; the remaining (dead)
+    rows are filled with the survivor mean, matching the ``reshape_nodes``
+    warm start (host-side mean for bit-identical replay across hosts). Dead
+    rows are inert under ``dpsgd_masked_step`` — the fill only matters if a
+    node is later revived."""
+    survivors = np.asarray(survivors, dtype=np.int64)
+
+    def fix(leaf):
+        if leaf.ndim == 0:
+            return leaf
+        leaf_np = np.asarray(leaf)
+        out = np.empty((n_total, *leaf_np.shape[1:]), dtype=leaf_np.dtype)
+        out[:] = leaf_np.mean(axis=0, keepdims=True).astype(leaf_np.dtype)
+        out[survivors] = leaf_np
+        return jnp.asarray(out)
+
     return jax.tree.map(fix, state)
 
 

@@ -23,8 +23,10 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["DPSGDConfig", "replicate", "mix", "dpsgd_step", "make_dpsgd_step"]
+__all__ = ["DPSGDConfig", "replicate", "mix", "dpsgd_step", "make_dpsgd_step",
+           "dpsgd_masked_step", "embed_w"]
 
 PyTree = Any
 
@@ -33,7 +35,11 @@ PyTree = Any
 class DPSGDConfig:
     eta: float = 0.01        # learning rate (paper Fig. 3: 0.01)
     local_steps: int = 1     # H; H=1 is the paper's Algorithm 1
-    mix_first: bool = True   # Eq. 5 order: mix stale params, subtract local grad
+    # Eq. 5 order. True:  X <- W X - eta G(X)   (gradient at pre-mix params,
+    # so computation and communication overlap — Lian et al.'s Algorithm 1).
+    # False: X <- W (X - eta G(X))  (gradient-first: local update, then mix).
+    # Both orders apply W every iteration and share the same fixed points.
+    mix_first: bool = True
 
 
 def replicate(params: PyTree, n: int) -> PyTree:
@@ -80,9 +86,18 @@ def dpsgd_step(
     h = config.local_steps
     if h == 1:
         losses, grads = _node_grads(loss_fn, node_params, node_batches)
-        mixed = mix(node_params, w) if config.mix_first else node_params
-        new_params = jax.tree.map(
-            lambda xm, g: xm - config.eta * g.astype(xm.dtype), mixed, grads)
+        if config.mix_first:
+            mixed = mix(node_params, w)
+            new_params = jax.tree.map(
+                lambda xm, g: xm - config.eta * g.astype(xm.dtype), mixed, grads)
+        else:
+            # gradient-first order: X <- W (X - eta G). The previous
+            # implementation skipped W entirely here, silently degenerating
+            # to plain per-node SGD.
+            stepped = jax.tree.map(
+                lambda x, g: x - config.eta * g.astype(x.dtype),
+                node_params, grads)
+            new_params = mix(stepped, w)
         return new_params, losses
 
     def local_step(params, batch):
@@ -98,6 +113,64 @@ def dpsgd_step(
     node_params, losses = jax.lax.scan(scan_body, node_params, batches_h)
     node_params = mix(node_params, w)
     return node_params, losses[-1]
+
+
+def embed_w(w_live, ids, n_total: int):
+    """Embed a compacted (n_live, n_live) mixing matrix into a fixed (n, n)
+    one for the masked-state layout: live rows/columns are scattered to their
+    original node indices ``ids``; dead rows get an identity row (their stale
+    parameters are carried unchanged) and dead columns weight 0 (they feed
+    nothing into live rows). This is the W contract ``dpsgd_masked_step``
+    assumes, and what makes churn jit-compatible: the state keeps its full
+    (n, ...) shape forever, no reshapes.
+    """
+    ids = np.asarray(ids, dtype=np.int64)
+    w_full = np.eye(n_total, dtype=np.float64)
+    w_full[np.ix_(ids, ids)] = np.asarray(w_live, dtype=np.float64)
+    return w_full
+
+
+def dpsgd_masked_step(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    node_params: PyTree,
+    node_batches: PyTree,
+    w: jax.Array,
+    live: jax.Array,
+    config: DPSGDConfig = DPSGDConfig(),
+) -> tuple[PyTree, jax.Array]:
+    """One D-PSGD iteration on a fixed-width node state under churn.
+
+    ``live`` is a (n,) bool mask; ``w`` must follow the ``embed_w`` contract
+    (identity rows / zero columns for dead nodes). Dead rows carry their
+    parameters unchanged — their gradients are masked to zero (``where``, so
+    NaNs from junk batch rows cannot leak) and their identity W row returns
+    them verbatim — and they never contribute to live rows, so live rows
+    evolve exactly as the compacted (reshape_nodes) state would. Returned
+    per-node losses are raw; mask with ``live`` before aggregating.
+
+    Only ``local_steps == 1`` is supported (the scan path mixes every round,
+    like the paper's Algorithm 1).
+    """
+    if config.local_steps != 1:
+        raise NotImplementedError(
+            "dpsgd_masked_step supports local_steps == 1 only")
+    losses, grads = _node_grads(loss_fn, node_params, node_batches)
+
+    def _mask(g: jax.Array) -> jax.Array:
+        m = live.reshape(live.shape[0], *([1] * (g.ndim - 1)))
+        return jnp.where(m, g, jnp.zeros((), dtype=g.dtype))
+
+    grads = jax.tree.map(_mask, grads)
+    if config.mix_first:
+        mixed = mix(node_params, w)
+        new_params = jax.tree.map(
+            lambda xm, g: xm - config.eta * g.astype(xm.dtype), mixed, grads)
+    else:
+        stepped = jax.tree.map(
+            lambda x, g: x - config.eta * g.astype(x.dtype),
+            node_params, grads)
+        new_params = mix(stepped, w)
+    return new_params, losses
 
 
 def make_dpsgd_step(

@@ -31,8 +31,9 @@ from ..utils.tree import buffers_to_tree, tree_to_buffers
 
 PyTree = Any
 
-__all__ = ["GossipRound", "GossipPlan", "ring_plan", "torus_plan", "hypercube_plan",
-           "allreduce_plan", "plan_w", "gossip_mix_array", "gossip_mix_tree"]
+__all__ = ["GossipRound", "GossipPlan", "round_crosses_pod", "ring_plan",
+           "torus_plan", "hypercube_plan", "allreduce_plan", "plan_w",
+           "gossip_mix_array", "gossip_mix_tree"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +92,29 @@ class GossipPlan:
 # Plan constructors (regular graphs => uniform Metropolis weights)
 # ---------------------------------------------------------------------------
 
+def round_crosses_pod(rnd: GossipRound, node_shape: Sequence[int]) -> bool:
+    """Exact DCI accounting: a round crosses the pod boundary iff *any*
+    source's leading (pod) coordinate changes under its permutation. The plan
+    constructors used to flag rounds with shape-level heuristics; this checks
+    the realized permutation itself, so rounds confined to the trailing
+    (intra-pod) axes are never charged DCI time in ``choose_plan``."""
+    shape = tuple(node_shape)
+    if len(shape) < 2 or shape[0] <= 1:
+        return False            # single-axis grid: no pod boundary to cross
+    trailing = int(np.prod(shape[1:]))
+    return any(src // trailing != dst // trailing
+               for src, dst in rnd.perm(shape))
+
+
+def _round(kind: str, arg: tuple[int, ...],
+           node_shape: Sequence[int]) -> GossipRound:
+    """A GossipRound with its ``crosses_pod`` flag derived from the
+    permutation (``round_crosses_pod``) instead of asserted by the caller."""
+    r = GossipRound(kind, arg)
+    return dataclasses.replace(
+        r, crosses_pod=round_crosses_pod(r, node_shape))
+
+
 def _uniform_weights(degree: int) -> tuple[float, float]:
     return 1.0 / (degree + 1.0), 1.0 / (degree + 1.0)
 
@@ -102,14 +126,13 @@ def ring_plan(axis_names: Sequence[str], node_shape: Sequence[int], k: int = 1,
     n = int(np.prod(node_shape))
     rounds: list[GossipRound] = []
     for s in range(1, k + 1):
-        # a flattened shift crosses the pod boundary whenever the leading
-        # (pod) coordinate changes for any source — for a row-major layout any
-        # +-s shift wraps across pods for s of the sources, so flag it if the
-        # grid has >1 leading-axis entries.
-        crosses = len(node_shape) > 1 and node_shape[0] > 1
-        rounds.append(GossipRound("shift", (s,), crosses))
+        # a flattened shift crosses the pod boundary iff the leading (pod)
+        # coordinate changes for some source (round_crosses_pod checks the
+        # realized permutation — on a row-major multi-pod grid every +-s
+        # shift wraps across pods for s of the sources).
+        rounds.append(_round("shift", (s,), node_shape))
         if (n - s) != s:
-            rounds.append(GossipRound("shift", (n - s,), crosses))
+            rounds.append(_round("shift", (n - s,), node_shape))
     self_w, nb_w = _uniform_weights(len(rounds))
     return GossipPlan(name or f"ring-{k}", tuple(axis_names), tuple(node_shape),
                       tuple(rounds), self_w, nb_w)
@@ -124,10 +147,9 @@ def torus_plan(axis_names: Sequence[str], node_shape: Sequence[int],
     for axis, size in enumerate(node_shape):
         if size == 1:
             continue
-        crosses = axis == 0 and len(node_shape) > 1
-        rounds.append(GossipRound("axshift", (axis, 1), crosses))
+        rounds.append(_round("axshift", (axis, 1), node_shape))
         if size > 2:
-            rounds.append(GossipRound("axshift", (axis, size - 1), crosses))
+            rounds.append(_round("axshift", (axis, size - 1), node_shape))
     self_w, nb_w = _uniform_weights(len(rounds))
     return GossipPlan(name or "torus", tuple(axis_names), tuple(node_shape),
                       tuple(rounds), self_w, nb_w)
@@ -139,13 +161,10 @@ def hypercube_plan(axis_names: Sequence[str], node_shape: Sequence[int],
     m = int(np.log2(n))
     if 2**m != n:
         raise ValueError(f"hypercube plan needs power-of-two nodes, got {n}")
-    # bit b of the row-major flat index belongs to the pod axis iff it selects
-    # the leading coordinate; for node_shape (p, d) those are the top bits.
-    data_bits = int(np.log2(np.prod(node_shape[1:]))) if len(node_shape) > 1 else m
-    rounds = tuple(
-        GossipRound("xor", (b,), crosses_pod=(b >= data_bits and len(node_shape) > 1))
-        for b in range(m)
-    )
+    # bit b of the row-major flat index belongs to the pod axis iff flipping
+    # it changes the leading coordinate — round_crosses_pod checks exactly
+    # that on the realized permutation.
+    rounds = tuple(_round("xor", (b,), node_shape) for b in range(m))
     self_w, nb_w = _uniform_weights(len(rounds))
     return GossipPlan(name or "hypercube", tuple(axis_names), tuple(node_shape),
                       tuple(rounds), self_w, nb_w)
@@ -173,9 +192,7 @@ def onepeer_plan(axis_names: Sequence[str], node_shape: Sequence[int],
     if 2**m != n:
         raise ValueError(f"one-peer exponential needs power-of-two nodes, got {n}")
     b = phase % m
-    data_bits = int(np.log2(np.prod(node_shape[1:]))) if len(node_shape) > 1 else m
-    rounds = (GossipRound("xor", (b,),
-                          crosses_pod=(b >= data_bits and len(node_shape) > 1)),)
+    rounds = (_round("xor", (b,), node_shape),)
     return GossipPlan(f"onepeer-{b}", tuple(axis_names), tuple(node_shape),
                       rounds, 0.5, 0.5, kind="gossip")
 

@@ -16,26 +16,36 @@ Modules:
 * ``mac``      — packet-level TDM broadcast, outage, retransmission
 * ``mobility`` — waypoint/cluster motion + Poisson churn
 * ``scenario`` — named scenario registry (static/fading/mobile/churn/mixed)
-* ``trace``    — event loop, per-round traces, accuracy-vs-simulated-time
+* ``trace``    — event loop, per-round traces, accuracy-vs-simulated-time,
+  driver-less ``precompute_trace`` (fixed-shape channel realizations)
+* ``batch``    — train-on-trace: jitted ``lax.scan`` training over
+  precomputed traces, ``vmap`` over Monte-Carlo (seed, scenario) batches
 """
+from .batch import train_cnn_on_traces, train_on_trace, train_on_traces
 from .events import Event, EventKind, EventQueue, SimClock
 from .fading import FadingChannel, FadingParams
-from .mac import MacParams, RoundResult, tdm_round, tdm_round_reference
+from .mac import (MacParams, RoundResult, mean_drift, tdm_round,
+                  tdm_round_reference)
 from .mobility import (ClusterMobility, PoissonChurn, RandomWaypoint,
                        StaticMobility, make_mobility)
 from .scenario import (DEFAULT_MODEL_BITS, ScenarioConfig, get_scenario,
                        list_scenarios, register)
-from .trace import (RoundContext, RoundRecord, SimTrace, WirelessSimulator,
-                    simulate_dpsgd_cnn, sweep)
+from .trace import (RoundContext, RoundRecord, SimTrace, TraceBatch,
+                    TrainTrace, WirelessSimulator, precompute_trace,
+                    precompute_traces, simulate_dpsgd_cnn, stack_traces,
+                    sweep)
 
 __all__ = [
     "Event", "EventKind", "EventQueue", "SimClock",
     "FadingChannel", "FadingParams",
-    "MacParams", "RoundResult", "tdm_round", "tdm_round_reference",
+    "MacParams", "RoundResult", "mean_drift", "tdm_round",
+    "tdm_round_reference",
     "ClusterMobility", "PoissonChurn", "RandomWaypoint", "StaticMobility",
     "make_mobility",
     "DEFAULT_MODEL_BITS", "ScenarioConfig", "get_scenario", "list_scenarios",
     "register",
-    "RoundContext", "RoundRecord", "SimTrace", "WirelessSimulator",
-    "simulate_dpsgd_cnn", "sweep",
+    "RoundContext", "RoundRecord", "SimTrace", "TraceBatch", "TrainTrace",
+    "WirelessSimulator", "precompute_trace", "precompute_traces",
+    "simulate_dpsgd_cnn", "stack_traces", "sweep",
+    "train_cnn_on_traces", "train_on_trace", "train_on_traces",
 ]

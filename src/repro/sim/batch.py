@@ -1,0 +1,265 @@
+"""Batched train-on-trace: Monte-Carlo D-PSGD training in one compiled call.
+
+The per-round driver (``trace.simulate_dpsgd_cnn``) interleaves the channel
+plane and training: one Python callback, one device dispatch, and one
+``block_until_ready`` per mixing round. That is the right thing when compute
+time must be *measured* (the paper's §IV-A method) or when training feeds
+back into the simulation; for Monte-Carlo sweeps over fading/mobility/churn
+seeds it is pure host overhead — the channel realization does not depend on
+the parameters at all.
+
+This module decouples the two:
+
+1. ``trace.precompute_trace`` runs the simulator driver-less and emits
+   fixed-shape tensors — stacked realized mixing matrices ``w_eff``
+   (rounds, n, n), live-node masks, and simulated-time stamps.
+2. ``train_on_trace`` consumes them in a single jitted ``jax.lax.scan``
+   over rounds (``core.dpsgd.dpsgd_masked_step`` per round: dead nodes keep
+   identity W rows and zero gradient weight, so churn needs no reshape).
+3. ``train_on_traces`` / ``train_cnn_on_traces`` wrap that scan in
+   ``jax.vmap`` over the (seed, scenario) batch axis: a whole family of
+   accuracy-vs-simulated-time curves from one compiled call.
+
+Parity: on any trace the scan path realizes exactly the per-round driver's
+update sequence (same batches, same W order), so per-round losses match the
+driver to float tolerance — pinned on the static scenario in
+``tests/test_batch.py`` and ``benchmarks/bench_train.py``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dpsgd import DPSGDConfig, dpsgd_masked_step
+from .scenario import ScenarioConfig, get_scenario
+from .trace import (TraceBatch, TrainTrace, driver_batch_indices,
+                    precompute_traces)
+
+__all__ = ["train_on_trace", "train_on_traces", "train_cnn_on_traces"]
+
+PyTree = Any
+
+
+@partial(jax.jit,
+         static_argnames=("loss_fn", "config", "collect_node0", "unroll"))
+def train_on_trace(
+    loss_fn: Callable[[PyTree, PyTree], Any],
+    node_params: PyTree,
+    w_seq,
+    live_seq,
+    batch_seq: PyTree,
+    config: DPSGDConfig = DPSGDConfig(),
+    collect_node0: bool = False,
+    unroll: int | bool = True,
+):
+    """Train over one precomputed trace in a single ``lax.scan``.
+
+    ``w_seq`` (rounds, n, n) and ``live_seq`` (rounds, n) come from a
+    ``TrainTrace``; ``batch_seq`` leaves carry (rounds, n, ...) per-round
+    per-node minibatches (dead rows may hold arbitrary filler — their
+    gradients are masked off). Returns ``(final_params, losses)`` with
+    ``losses`` (rounds, n) raw per-node losses (mask with ``live_seq``
+    before aggregating), plus per-round snapshots of the first live node's
+    parameters when ``collect_node0`` (for post-hoc accuracy curves). The
+    snapshot stack costs O(rounds x |node params|) device memory — fine for
+    paper-scale models; disable it (and evaluate from ``final_params``)
+    when that bill matters.
+
+    ``unroll`` is forwarded to ``lax.scan``. The default (full unroll)
+    trades one longer compile for straight-line round code — on XLA:CPU the
+    rolled ``while`` loop runs the identical step ~3x slower than the same
+    body unrolled, and Monte-Carlo sweeps re-enter this function with
+    identical shapes, so the compile amortizes across the whole family.
+    Pass ``unroll=1`` on accelerators or for very long traces.
+    """
+    def body(params, xs):
+        w, live, batch = xs
+        new_params, losses = dpsgd_masked_step(
+            loss_fn, params, batch, w, live, config)
+        if collect_node0:
+            first = jnp.argmax(live)        # first live row (original-id order)
+            snap = jax.tree.map(lambda p: p[first], new_params)
+            return new_params, (losses, snap)
+        return new_params, (losses,)
+
+    final, outs = jax.lax.scan(body, node_params,
+                               (w_seq, live_seq, batch_seq), unroll=unroll)
+    if collect_node0:
+        return final, outs[0], outs[1]
+    return final, outs[0]
+
+
+def train_on_traces(
+    loss_fn: Callable[[PyTree, PyTree], Any],
+    node_params: PyTree,
+    w_seq,
+    live_seq,
+    batch_seq: PyTree,
+    config: DPSGDConfig = DPSGDConfig(),
+    collect_node0: bool = False,
+    params_batched: bool = False,
+    unroll: int | bool = True,
+):
+    """``train_on_trace`` vmapped over a leading Monte-Carlo axis.
+
+    Every array gains a leading (S,) axis (``TraceBatch`` layout). With
+    ``params_batched`` the initial parameters carry the axis too (per-seed
+    inits); otherwise one init is shared by every trace. One compiled call
+    produces the whole (S,)-family of loss/parameter trajectories.
+    """
+    def one(p, w, live, b):
+        return train_on_trace(loss_fn, p, w, live, b, config, collect_node0,
+                              unroll)
+
+    return jax.vmap(one, in_axes=(0 if params_batched else None, 0, 0, 0))(
+        node_params, w_seq, live_seq, batch_seq)
+
+
+def _driver_batches(cfg: ScenarioConfig, tr: TrainTrace, shard_x: np.ndarray,
+                    shard_y: np.ndarray, batch: int):
+    """Per-round minibatch tensors replaying exactly the per-round driver's
+    sampling (``trace.driver_batch_indices`` is the shared contract):
+    compacted row k maps to the k-th live original id. Dead rows repeat
+    their shard's row 0 (inert filler)."""
+    per_node = shard_x.shape[1]
+    n, rounds = tr.n_nodes, tr.n_rounds
+    imgs = np.empty((rounds, n, batch, *shard_x.shape[2:]), shard_x.dtype)
+    labs = np.empty((rounds, n, batch), shard_y.dtype)
+    imgs[:] = shard_x[None, :, 0, None]
+    labs[:] = shard_y[None, :, 0, None]
+    for r in range(rounds):
+        ids = np.flatnonzero(tr.live[r])
+        idx = driver_batch_indices(cfg.seed, r, ids.size, per_node, batch)
+        for k, i in enumerate(ids):
+            imgs[r, i] = shard_x[i, idx[k]]
+            labs[r, i] = shard_y[i, idx[k]]
+    return imgs, labs
+
+
+def _cnn_loss(p, b):
+    """Module-level loss so repeated ``train_cnn_on_traces`` calls hit the
+    same jit cache entry (a per-call lambda would recompile every sweep —
+    the exact overhead the per-round driver pays today)."""
+    from ..models import cnn
+    return cnn.cnn_loss(p, b)
+
+
+def train_cnn_on_traces(
+    configs: Sequence,
+    epochs: int = 2,
+    batch: int = 25,
+    eta: float = 0.05,
+    n_train: int = 1200,
+    n_test: int = 300,
+    ds=None,
+    trace_batch: Optional[TraceBatch] = None,
+    unroll: int | bool = True,
+) -> tuple[TraceBatch, dict]:
+    """The batched counterpart of ``trace.simulate_dpsgd_cnn``: train the
+    paper's CNN over a family of precomputed channel realizations in one
+    scan/vmap call.
+
+    ``configs`` is a sequence of ``ScenarioConfig``/names — typically one
+    scenario at several seeds (a fading Monte-Carlo sweep). All must share
+    ``n_nodes`` and ``eval_every_rounds``. Pass ``trace_batch`` to reuse
+    already-precomputed traces (it must have ``epochs * iters_per_epoch``
+    rounds).
+
+    Returns ``(traces, out)`` where ``out`` has per-trace masked mean
+    ``losses`` (S, rounds), eval-round accuracies ``acc`` (S, E) with their
+    simulated-time stamps ``t_acc_s`` (S, E), ``curves`` (list of
+    accuracy-vs-simulated-time point lists, the driver's
+    ``SimTrace.accuracy_curve`` analogue), and ``final_params`` (per-trace
+    node-stacked params compacted to the surviving nodes).
+    """
+    from ..checkpoint.ckpt import compact_nodes
+    from ..core import dpsgd
+    from ..data import SyntheticFashion, node_splits
+    from ..models import cnn
+
+    cfgs = [get_scenario(c) if isinstance(c, str) else c for c in configs]
+    if not cfgs:
+        raise ValueError("train_cnn_on_traces needs at least one config")
+    n_nodes = cfgs[0].n_nodes
+    eval_every = cfgs[0].eval_every_rounds
+    for c in cfgs:
+        if c.n_nodes != n_nodes or c.eval_every_rounds != eval_every:
+            raise ValueError("configs must share n_nodes/eval_every_rounds")
+    cfgs = [c if abs(c.model_bits - cnn.MODEL_BITS) <= 0.5
+            else c.replace(model_bits=float(cnn.MODEL_BITS)) for c in cfgs]
+
+    ds = ds or SyntheticFashion(n_train=n_train, n_test=n_test, seed=0)
+    shards = node_splits(ds.train_x, ds.train_y, n_nodes, seed=0)
+    shard_x = np.stack([x for x, _ in shards])
+    shard_y = np.stack([y for _, y in shards])
+    per_node = shard_x.shape[1]
+    iters_per_epoch = max(per_node // batch, 1)
+    n_rounds = iters_per_epoch * epochs
+
+    traces = (trace_batch if trace_batch is not None
+              else precompute_traces(cfgs, n_rounds))
+    if (traces.n_traces != len(cfgs) or traces.n_rounds != n_rounds
+            or traces.n_nodes != n_nodes):
+        raise ValueError(
+            f"trace batch shape ({traces.n_traces}, {traces.n_rounds}, "
+            f"{traces.n_nodes}) does not match ({len(cfgs)}, {n_rounds}, "
+            f"{n_nodes})")
+    for c, t in zip(cfgs, traces.traces):
+        # provenance, not just shape: a trace realized under any other
+        # config (seed, churn rate, fading, solver, model_bits, ...) would
+        # silently pair foreign W sequences and time stamps with this
+        # config's minibatch stream
+        if t.cfg != c:
+            raise ValueError(
+                f"trace realized under {t.cfg} cannot train config {c}")
+
+    built = [_driver_batches(c, t, shard_x, shard_y, batch)
+             for c, t in zip(cfgs, traces.traces)]
+    batches = {"images": jnp.asarray(np.stack([b[0] for b in built])),
+               "labels": jnp.asarray(np.stack([b[1] for b in built]))}
+    params0 = [dpsgd.replicate(cnn.cnn_init(jax.random.key(c.seed)), n_nodes)
+               for c in cfgs]
+    params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *params0)
+
+    finals, losses, snaps = train_on_traces(
+        _cnn_loss, params0,
+        jnp.asarray(traces.w_eff), jnp.asarray(traces.live), batches,
+        DPSGDConfig(eta=eta), collect_node0=True, params_batched=True,
+        unroll=unroll)
+
+    live = traces.live                                    # (S, rounds, n)
+    raw = np.asarray(losses, dtype=np.float64)            # (S, rounds, n)
+    # where, not multiply: dead-row filler may legally produce NaN losses
+    masked = np.where(live, raw, 0.0)
+    mean_losses = masked.sum(-1) / live.sum(-1)           # masked driver mean
+
+    eval_rounds = [r for r in range(n_rounds)
+                   if (r + 1) % eval_every == 0 or r + 1 == n_rounds]
+    s_count = traces.n_traces
+    test_x = jnp.asarray(ds.test_x[:n_test])
+    test_y = jnp.asarray(ds.test_y[:n_test])
+    sel = jax.tree.map(
+        lambda p: p[:, np.asarray(eval_rounds)].reshape(
+            (s_count * len(eval_rounds),) + p.shape[2:]), snaps)
+    accs = jax.vmap(lambda p: cnn.cnn_accuracy(p, test_x, test_y))(sel)
+    accs = np.asarray(accs, dtype=np.float64).reshape(
+        s_count, len(eval_rounds))
+    t_acc = traces.t_end_s[:, eval_rounds]
+
+    curves = [list(zip(t_acc[s].tolist(), accs[s].tolist()))
+              for s in range(s_count)]
+    final_params = [
+        compact_nodes(jax.tree.map(lambda p, s=s: p[s], finals), live[s, -1])
+        for s in range(s_count)]
+    return traces, {
+        "losses": mean_losses,
+        "acc": accs,
+        "t_acc_s": t_acc,
+        "eval_rounds": eval_rounds,
+        "curves": curves,
+        "final_params": final_params,
+    }

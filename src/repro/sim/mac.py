@@ -39,7 +39,22 @@ import numpy as np
 from ..core.topology import paper_w
 from .events import EventKind, EventQueue, SimClock
 
-__all__ = ["MacParams", "RoundResult", "tdm_round", "tdm_round_reference"]
+__all__ = ["MacParams", "RoundResult", "mean_drift", "tdm_round",
+           "tdm_round_reference"]
+
+
+def mean_drift(w: np.ndarray) -> float:
+    """How much one application of ``w`` can move the global parameter mean:
+    ``mean(W X) - mean(X) = (1/n) (1^T W - 1^T) X``, so the L2 norm of the
+    column-sum deviation vector, scaled by 1/n, is the operator norm of the
+    per-round mean shift (attained by the worst-case unit X). Exactly 0 iff
+    W is column-stochastic — symmetric W, or row-normalized *regular*
+    delivered graphs (every node the same degree, e.g. full delivery or a
+    delivered ring). Row-stochastic W under asymmetric
+    outage is row- but not column-stochastic, so gossip biases the mean; this
+    is the per-round diagnostic ``RoundRecord``/``SimTrace.summary`` track."""
+    w = np.asarray(w, dtype=np.float64)
+    return float(np.linalg.norm(w.sum(axis=0) - 1.0) / w.shape[0])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +93,10 @@ class RoundResult:
         a = self.delivered.T.astype(np.float64)  # a[j, i] = j received i
         np.fill_diagonal(a, 1.0)
         return paper_w(a)
+
+    def mean_drift(self) -> float:
+        """``mean_drift`` of this round's realized mixing matrix."""
+        return mean_drift(self.effective_w())
 
 
 def _packets(model_bits: float, packet_bits: float) -> list[float]:

@@ -38,12 +38,14 @@ from ..core.topology import adjacency_from_rates, spectral_lambda
 from ..runtime.fault import ElasticController
 from .events import EventKind, EventQueue, SimClock
 from .fading import FadingChannel
-from .mac import RoundResult, tdm_round, tdm_round_reference
+from .mac import RoundResult, mean_drift, tdm_round, tdm_round_reference
 from .mobility import PoissonChurn, make_mobility
 from .scenario import ScenarioConfig, get_scenario
 
 __all__ = ["RoundRecord", "SimTrace", "RoundContext", "WirelessSimulator",
-           "simulate_dpsgd_cnn", "sweep"]
+           "TrainTrace", "TraceBatch", "precompute_trace", "precompute_traces",
+           "stack_traces", "driver_batch_indices", "simulate_dpsgd_cnn",
+           "sweep"]
 
 
 @dataclasses.dataclass
@@ -65,6 +67,10 @@ class RoundRecord:
     replanned: bool
     loss: Optional[float] = None
     acc: Optional[float] = None
+    # ||mean(W_eff X) - mean(X)|| proxy (column-sum deviation / n, see
+    # mac.mean_drift): 0 iff the realized W preserves the global parameter
+    # mean; > 0 marks rounds where asymmetric outage biased gossip.
+    mean_drift: float = 0.0
 
     @property
     def t_end_s(self) -> float:
@@ -104,6 +110,8 @@ class SimTrace:
             "total_comm_s": self.total_comm_s,
             "total_compute_s": self.total_compute_s,
             "outage_rate": (n_out / n_int) if n_int else 0.0,
+            "mean_drift_max": max((r.mean_drift for r in self.records),
+                                  default=0.0),
             "retx_packets": sum(r.retx_packets for r in self.records),
             "replans": self.replans,
             "failures": len(self.failures),
@@ -265,7 +273,8 @@ class WirelessSimulator:
             retx_packets=result.retx_packets,
             delivered_frac=result.delivered_frac,
             replanned=replanned,
-            loss=metrics.get("loss"), acc=metrics.get("acc"))
+            loss=metrics.get("loss"), acc=metrics.get("acc"),
+            mean_drift=mean_drift(w_eff))
         self._round += 1
         return rec
 
@@ -304,6 +313,142 @@ class WirelessSimulator:
             failures=list(self.failures), t_end_s=self.clock.now,
             events_processed=self.queue.processed)
 
+    def precompute(self, n_rounds: int) -> "TrainTrace":
+        """Run the channel plane driver-less and emit fixed-shape per-round
+        tensors for the batched training path (``sim.batch``): the realized
+        mixing matrices embedded to the full ``cfg.n_nodes`` width
+        (``core.dpsgd.embed_w`` — dead rows identity, dead columns zero),
+        per-round live-node masks, and the simulated-time stamps. Per-round
+        compute time is ``cfg.compute_s_per_round`` (the only compute model
+        available without a live training driver — see README "Train-on-
+        trace" for when that is exact)."""
+        from ..core.dpsgd import embed_w
+
+        n = self.cfg.n_nodes
+        ws: list[np.ndarray] = []
+        lives: list[np.ndarray] = []
+
+        def recorder(ctx: RoundContext) -> None:
+            ids = np.asarray(ctx.ids, dtype=np.int64)
+            ws.append(embed_w(ctx.w_eff, ids, n))
+            mask = np.zeros(n, dtype=bool)
+            mask[ids] = True
+            lives.append(mask)
+            return None
+
+        trace = self.run(n_rounds, recorder)
+        return TrainTrace(
+            scenario=self.cfg.name,
+            n_nodes=n,
+            w_eff=(np.stack(ws) if ws else np.zeros((0, n, n))),
+            live=(np.stack(lives) if lives else np.zeros((0, n), dtype=bool)),
+            t_start_s=np.array([rec.t_start_s for rec in trace.records]),
+            t_comm_s=np.array([rec.t_comm_s for rec in trace.records]),
+            t_end_s=np.array([rec.t_end_s for rec in trace.records]),
+            trace=trace,
+            cfg=self.cfg,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Precomputed train-on-trace tensors
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainTrace:
+    """Fixed-shape channel realization of one scenario run.
+
+    The node axis is always ``n_nodes`` (the scenario's initial width):
+    churn never reshapes, it masks. ``live[r, i]`` says node ``i`` (original
+    id) is alive in round ``r``; the compacted index the per-round driver
+    would use for it is the rank of ``i`` among the set bits (churn only
+    removes nodes, so original-id order is preserved). ``w_eff[r]`` follows
+    the ``core.dpsgd.embed_w`` contract: live block = the realized mixing
+    matrix, dead rows identity, dead columns zero.
+    """
+
+    scenario: str
+    n_nodes: int
+    w_eff: np.ndarray       # (rounds, n, n) float64
+    live: np.ndarray        # (rounds, n) bool
+    t_start_s: np.ndarray   # (rounds,)
+    t_comm_s: np.ndarray    # (rounds,)
+    t_end_s: np.ndarray     # (rounds,) — comm + cfg.compute_s_per_round
+    trace: SimTrace         # the underlying per-round records
+    cfg: ScenarioConfig     # the exact config this trace realizes
+
+    @property
+    def n_rounds(self) -> int:
+        return self.w_eff.shape[0]
+
+    @property
+    def n_live(self) -> np.ndarray:
+        """(rounds,) live-node counts."""
+        return self.live.sum(axis=1)
+
+
+@dataclasses.dataclass
+class TraceBatch:
+    """A stack of equal-shape ``TrainTrace`` runs — the Monte-Carlo batch
+    axis ``jax.vmap`` maps over in ``sim.batch.train_cnn_on_traces``."""
+
+    scenarios: list[str]
+    n_nodes: int
+    w_eff: np.ndarray       # (S, rounds, n, n)
+    live: np.ndarray        # (S, rounds, n)
+    t_start_s: np.ndarray   # (S, rounds)
+    t_comm_s: np.ndarray    # (S, rounds)
+    t_end_s: np.ndarray     # (S, rounds)
+    traces: list[TrainTrace]
+
+    @property
+    def n_traces(self) -> int:
+        return self.w_eff.shape[0]
+
+    @property
+    def n_rounds(self) -> int:
+        return self.w_eff.shape[1]
+
+
+def stack_traces(traces: list) -> TraceBatch:
+    """Stack ``TrainTrace`` runs (same n_nodes, same round count) into the
+    (S, rounds, ...) tensors the vmapped scan consumes."""
+    if not traces:
+        raise ValueError("stack_traces needs at least one trace")
+    n = traces[0].n_nodes
+    r = traces[0].n_rounds
+    for t in traces:
+        if t.n_nodes != n or t.n_rounds != r:
+            raise ValueError(
+                "stack_traces needs homogeneous traces: got "
+                f"(n={t.n_nodes}, rounds={t.n_rounds}) vs (n={n}, rounds={r})")
+    return TraceBatch(
+        scenarios=[t.scenario for t in traces],
+        n_nodes=n,
+        w_eff=np.stack([t.w_eff for t in traces]),
+        live=np.stack([t.live for t in traces]),
+        t_start_s=np.stack([t.t_start_s for t in traces]),
+        t_comm_s=np.stack([t.t_comm_s for t in traces]),
+        t_end_s=np.stack([t.t_end_s for t in traces]),
+        traces=list(traces),
+    )
+
+
+def precompute_trace(cfg, n_rounds: int, **overrides) -> TrainTrace:
+    """Realize one scenario's channel plane ahead of training. ``cfg`` is a
+    ``ScenarioConfig`` or a registered scenario name (+ overrides)."""
+    if isinstance(cfg, str):
+        cfg = get_scenario(cfg, **overrides)
+    elif overrides:
+        cfg = cfg.replace(**overrides)
+    return WirelessSimulator(cfg).precompute(n_rounds)
+
+
+def precompute_traces(configs, n_rounds: int) -> TraceBatch:
+    """``precompute_trace`` over a sequence of configs/names, stacked into a
+    ``TraceBatch`` (the Monte-Carlo channel-realization family)."""
+    return stack_traces([precompute_trace(c, n_rounds) for c in configs])
+
 
 # ---------------------------------------------------------------------------
 # Monte-Carlo sweeps
@@ -334,6 +479,17 @@ def sweep(
 # ---------------------------------------------------------------------------
 # Training on simulated time
 # ---------------------------------------------------------------------------
+
+def driver_batch_indices(seed: int, round_: int, n_live: int, per_node: int,
+                         batch: int) -> np.ndarray:
+    """The (n_live, batch) minibatch indices training draws at one round —
+    THE sampling contract shared by the per-round driver and the batched
+    scan path (``sim.batch``): row k indexes the shard of the k-th live
+    node in original-id order. Any change here changes both paths together,
+    which is what keeps them loss-for-loss interchangeable."""
+    rng = np.random.default_rng((seed, 0xB0, round_))
+    return rng.integers(0, per_node, size=(n_live, batch))
+
 
 def simulate_dpsgd_cnn(
     cfg: ScenarioConfig,
@@ -385,8 +541,8 @@ def simulate_dpsgd_cnn(
                                             len(survivors))
             state["shards"] = [state["shards"][k] for k in survivors]
         n_live = len(ctx.ids)
-        rng = np.random.default_rng((cfg.seed, 0xB0, ctx.round))
-        idx = rng.integers(0, per_node, size=(n_live, batch))
+        idx = driver_batch_indices(cfg.seed, ctx.round, n_live, per_node,
+                                   batch)
         b = {"images": jnp.asarray(np.stack(
                 [state["shards"][i][0][idx[i]] for i in range(n_live)])),
              "labels": jnp.asarray(np.stack(

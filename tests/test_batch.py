@@ -1,0 +1,215 @@
+"""Train-on-trace plane: precompute tensors, scan/vmap parity, diagnostics.
+
+The load-bearing tests are the parity pins: the single-compiled-call scan
+path must reproduce the per-round Python driver's losses round for round on
+the static scenario (the PR's acceptance tolerance, <= 1e-5), and the
+masked fixed-shape path must track the reshape-based driver through churn.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.topology import spectral_lambda
+from repro.sim import (WirelessSimulator, get_scenario, mean_drift,
+                       precompute_trace, precompute_traces, stack_traces,
+                       sweep, train_cnn_on_traces)
+
+TRAIN_KW = dict(epochs=1, n_train=600, n_test=150)
+
+
+# ---------------------------------------------------------------------------
+# Precomputed traces
+# ---------------------------------------------------------------------------
+
+def test_precompute_static_matches_plan_and_records():
+    cfg = get_scenario("static", compute_s_per_round=0.05)
+    sim = WirelessSimulator(cfg)
+    tr = sim.precompute(5)
+    assert tr.w_eff.shape == (5, 6, 6)
+    assert tr.live.shape == (5, 6) and tr.live.all()
+    assert (tr.n_live == 6).all()
+    # static channel: every round realizes the same W, with lambda matching
+    # the per-round records
+    for r in range(5):
+        np.testing.assert_array_equal(tr.w_eff[r], tr.w_eff[0])
+        assert tr.trace.records[r].lam_effective == pytest.approx(
+            spectral_lambda(tr.w_eff[r]))
+    np.testing.assert_allclose(
+        tr.t_end_s, [rec.t_end_s for rec in tr.trace.records])
+    np.testing.assert_allclose(tr.t_comm_s + 0.05, tr.t_end_s - tr.t_start_s)
+
+
+def test_precompute_churn_masks_dead_rows():
+    cfg = get_scenario("churn", churn_rate_per_s=0.5, solver="greedy")
+    tr = precompute_trace(cfg, 16)
+    assert tr.trace.summary()["failures"] >= 1
+    n_live = tr.n_live
+    assert (np.diff(n_live) <= 0).all() and n_live[-1] < 6
+    for r in range(tr.n_rounds):
+        dead = np.flatnonzero(~tr.live[r])
+        for i in dead:
+            row = np.zeros(6)
+            row[i] = 1.0
+            np.testing.assert_array_equal(tr.w_eff[r, i], row)   # identity row
+            assert tr.w_eff[r, tr.live[r], i].sum() == 0.0       # zero column
+        # live block rows remain stochastic
+        np.testing.assert_allclose(tr.w_eff[r].sum(axis=1), 1.0)
+
+
+def test_stack_traces_rejects_heterogeneous():
+    a = precompute_trace("static", 3)
+    b = precompute_trace("static", 4)
+    with pytest.raises(ValueError, match="homogeneous"):
+        stack_traces([a, b])
+    batch = precompute_traces(["static", "static"], 3)
+    assert batch.w_eff.shape == (2, 3, 6, 6)
+    assert batch.n_traces == 2 and batch.n_rounds == 3
+
+
+# ---------------------------------------------------------------------------
+# Scan/vmap training parity against the per-round driver
+# ---------------------------------------------------------------------------
+
+def test_scan_path_matches_driver():
+    """Acceptance pin: the scan/vmap path reproduces the per-round driver —
+    static losses/accuracy points/time stamps within 1e-5, and the masked
+    fixed-shape rounds track the reshape-based driver through churn (same
+    live-node counts, losses, final surviving parameters).
+
+    The single implementation of these pins lives in
+    ``benchmarks.bench_train.check_parity`` (also the ``--quick`` CI gate);
+    requires running pytest from the repo root (the tier-1 command).
+    """
+    bench_train = pytest.importorskip(
+        "benchmarks.bench_train",
+        reason="parity pins import benchmarks/ (run pytest from repo root)")
+    parity = bench_train.check_parity()
+    assert parity["static_ok"], parity
+    assert parity["churn_ok"], parity
+    assert parity["static_max_loss_diff"] <= 1e-5
+    assert parity["churn_max_loss_diff"] <= 1e-5
+    assert parity["churn_failures"] >= 1      # churn actually happened
+
+
+def test_trace_batch_provenance_checked():
+    """Reusing a precomputed TraceBatch for configs it was not realized
+    under must be rejected (shape match alone is not enough)."""
+    cfgs = [get_scenario("static", seed=0)]
+    batch = precompute_traces(cfgs, 4)
+    with pytest.raises(ValueError, match="seed"):
+        train_cnn_on_traces([get_scenario("static", seed=1)],
+                            trace_batch=batch, **TRAIN_KW)
+
+
+def test_scan_path_vmaps_seed_families():
+    """One call, several seeds: the vmapped family must agree with per-seed
+    runs of the same scan path."""
+    cfgs = [get_scenario("static", seed=s) for s in (0, 1)]
+    _, fam = train_cnn_on_traces(cfgs, **TRAIN_KW)
+    _, solo0 = train_cnn_on_traces([cfgs[0]], **TRAIN_KW)
+    _, solo1 = train_cnn_on_traces([cfgs[1]], **TRAIN_KW)
+    np.testing.assert_allclose(fam["losses"][0], solo0["losses"][0],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(fam["losses"][1], solo1["losses"][0],
+                               rtol=1e-5, atol=1e-6)
+    # different seeds genuinely differ (different inits + batches)
+    assert np.abs(fam["losses"][0] - fam["losses"][1]).max() > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Sweep determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("reference_mac", [False, True])
+def test_sweep_deterministic(reference_mac):
+    """Same configs + seeds => bit-identical RoundRecord streams."""
+    configs = [get_scenario(name, seed=s, solver="greedy",
+                            reference_mac=reference_mac)
+               for name in ("fading", "churn") for s in (0, 1)]
+    t1 = sweep(configs, 6)
+    t2 = sweep(configs, 6)
+    for a, b in zip(t1, t2):
+        assert len(a.records) == len(b.records) == 6
+        for ra, rb in zip(a.records, b.records):
+            assert dataclasses.asdict(ra) == dataclasses.asdict(rb)
+        assert a.t_end_s == b.t_end_s
+        assert a.failures == b.failures
+
+
+# ---------------------------------------------------------------------------
+# Mean-drift diagnostic
+# ---------------------------------------------------------------------------
+
+def test_mean_drift_zero_for_symmetric_regular_delivery():
+    """Full delivery (complete graph + self-loops) gives the doubly
+    stochastic W = 11^T/n: drift must be exactly 0. Same for any regular
+    symmetric delivered graph (equal in-degrees => column sums 1)."""
+    n = 5
+    w = np.full((n, n), 1.0 / n)
+    assert mean_drift(w) == 0.0
+    # ring delivery: regular degree 3 (self + 2 neighbors)
+    ring = np.eye(n)
+    for i in range(n):
+        ring[i, (i + 1) % n] = ring[i, (i - 1) % n] = 1.0
+    assert mean_drift(ring / ring.sum(1, keepdims=True)) == 0.0
+
+
+def test_mean_drift_positive_for_asymmetric_outage():
+    """Dropping one direction of one link makes W row- but not column-
+    stochastic: the mean drifts, and the recorded proxy bounds the realized
+    shift |mean(Wx) - mean(x)| for every x (tight at x = colsum deviation)."""
+    n = 4
+    a = np.ones((n, n))
+    a[2, 0] = 0.0                      # node 2 lost node 0's broadcast only
+    w = a / a.sum(1, keepdims=True)
+    drift = mean_drift(w)
+    assert drift > 0.0
+    rng = np.random.default_rng(0)
+    c = w.sum(axis=0) - 1.0
+    for x in (rng.standard_normal(n), rng.standard_normal(n), c):
+        shift = abs((w @ x).mean() - x.mean())
+        assert shift <= drift * np.linalg.norm(x) + 1e-12
+    # tightness at the worst-case direction
+    x = c / np.linalg.norm(c)
+    assert abs((w @ x).mean() - x.mean()) == pytest.approx(drift)
+
+
+def test_trace_records_mean_drift():
+    # static: the same W every round (the planned reception graph, row- but
+    # not necessarily column-stochastic) => one constant drift value,
+    # matching mac.mean_drift of the realized matrix
+    tr = WirelessSimulator(get_scenario("static")).precompute(4)
+    drifts = [r.mean_drift for r in tr.trace.records]
+    assert len(set(drifts)) == 1
+    assert drifts[0] == mean_drift(tr.w_eff[0])
+    assert tr.trace.summary()["mean_drift_max"] == drifts[0]
+    fading = WirelessSimulator(get_scenario("fading")).run(10)
+    s = fading.summary()
+    assert s["outage_rate"] > 0.0
+    assert s["mean_drift_max"] > 0.0
+    assert s["mean_drift_max"] == max(r.mean_drift for r in fading.records)
+    assert any(r.mean_drift > 0.0 for r in fading.records)
+
+
+# ---------------------------------------------------------------------------
+# Masked <-> compacted state surgery
+# ---------------------------------------------------------------------------
+
+def test_compact_expand_roundtrip():
+    import jax.numpy as jnp
+
+    from repro.checkpoint import compact_nodes, expand_nodes
+
+    state = {"a": jnp.arange(12.0).reshape(4, 3), "s": jnp.asarray(2.0)}
+    live = np.array([True, False, True, False])
+    comp = compact_nodes(state, live)
+    np.testing.assert_array_equal(np.asarray(comp["a"]),
+                                  [[0, 1, 2], [6, 7, 8]])
+    assert float(comp["s"]) == 2.0
+    back = expand_nodes(comp, [0, 2], 4)
+    np.testing.assert_array_equal(np.asarray(back["a"])[[0, 2]],
+                                  np.asarray(comp["a"]))
+    # dead rows warm-start at the survivor mean (reshape_nodes semantics)
+    np.testing.assert_allclose(np.asarray(back["a"])[1],
+                               np.asarray(comp["a"]).mean(0))

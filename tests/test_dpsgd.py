@@ -86,6 +86,95 @@ def test_local_steps_h():
                                np.full((n, d), 0.95**h), rtol=1e-5)
 
 
+def test_mix_first_false_applies_w():
+    """Regression: the gradient-first order is X <- W (X - eta G), not plain
+    per-node SGD (the old implementation silently skipped W entirely)."""
+    n, d = 4, 3
+    w = jnp.asarray(topology.metropolis_w(topology.ring_adjacency(n, 1)))
+    x0 = jnp.arange(n * d, dtype=jnp.float32).reshape(n, d)
+    params = {"x": x0}
+    batch = jnp.zeros((n, 2, d))
+
+    def loss(p, b):
+        return 0.5 * jnp.mean((p["x"][None] - b) ** 2) * d  # grad = x
+
+    cfg = DPSGDConfig(eta=0.1, mix_first=False)
+    new, _ = dpsgd.dpsgd_step(loss, params, batch, w, cfg)
+    expect = np.asarray(w) @ np.asarray(x0 - 0.1 * x0)
+    np.testing.assert_allclose(np.asarray(new["x"]), expect, rtol=1e-5)
+    # and it must NOT equal plain SGD (which skips W)
+    plain = np.asarray(x0 - 0.1 * x0)
+    assert np.abs(np.asarray(new["x"]) - plain).max() > 1e-3
+
+
+@pytest.mark.parametrize("mix_first", [True, False])
+def test_both_orders_contract_disagreement(mix_first):
+    """Either Eq. 5 order must mix every iteration: starting from disagreeing
+    nodes with *zero* gradients, one step contracts the consensus deviation
+    at rate <= lambda (plain SGD would leave it untouched)."""
+    n, d = 8, 5
+    adj = topology.ring_adjacency(n, 2)
+    w = topology.metropolis_w(adj)
+    lam = topology.spectral_lambda(w)
+    x0 = np.asarray(jax.random.normal(jax.random.key(7), (n, d)))
+
+    def loss(p, b):
+        return 0.0 * jnp.sum(p["x"])   # grad = 0: isolates the mixing step
+
+    batch = jnp.zeros((n, 1, d))
+    cfg = DPSGDConfig(eta=0.1, mix_first=mix_first)
+    new, _ = dpsgd.dpsgd_step(loss, {"x": jnp.asarray(x0)}, batch,
+                              jnp.asarray(w), cfg)
+    x1 = np.asarray(new["x"])
+    dev0 = np.linalg.norm(x0 - x0.mean(0))
+    dev1 = np.linalg.norm(x1 - x1.mean(0))
+    assert dev1 <= lam * dev0 + 1e-5       # plain SGD would give dev1 == dev0
+
+
+@pytest.mark.parametrize("mix_first", [True, False])
+def test_masked_step_matches_compacted(mix_first):
+    """dpsgd_masked_step on the fixed-width state (dead rows identity W /
+    zero grad) must evolve live rows exactly like dpsgd_step on the
+    compacted survivor state."""
+    n, d = 6, 4
+    ids = [0, 2, 3, 5]                      # nodes 1 and 4 are dead
+    w_live = topology.metropolis_w(topology.ring_adjacency(len(ids), 1))
+    w_full = dpsgd.embed_w(w_live, ids, n)
+    # dead rows identity, dead columns feed nothing into live rows
+    assert w_full[1, 1] == 1.0 and w_full[4, 4] == 1.0
+    assert w_full[np.asarray(ids)][:, [1, 4]].sum() == 0.0
+
+    targets = np.asarray(jax.random.normal(jax.random.key(3), (n, 2, d)))
+
+    def loss(p, b):
+        return 0.5 * jnp.mean((p["x"][None] - b) ** 2)
+
+    x0 = np.asarray(jax.random.normal(jax.random.key(4), (n, d)))
+    live = np.zeros(n, dtype=bool)
+    live[ids] = True
+    cfg = DPSGDConfig(eta=0.2, mix_first=mix_first)
+    full, losses_full = dpsgd.dpsgd_masked_step(
+        loss, {"x": jnp.asarray(x0)}, jnp.asarray(targets),
+        jnp.asarray(w_full), jnp.asarray(live), cfg)
+    comp, losses_comp = dpsgd.dpsgd_step(
+        loss, {"x": jnp.asarray(x0[ids])}, jnp.asarray(targets[ids]),
+        jnp.asarray(w_live), cfg)
+    np.testing.assert_allclose(np.asarray(full["x"])[ids],
+                               np.asarray(comp["x"]), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(losses_full)[ids],
+                               np.asarray(losses_comp), rtol=1e-6)
+    # dead rows are frozen
+    np.testing.assert_array_equal(np.asarray(full["x"])[[1, 4]], x0[[1, 4]])
+
+
+def test_masked_step_rejects_local_steps():
+    with pytest.raises(NotImplementedError):
+        dpsgd.dpsgd_masked_step(
+            lambda p, b: jnp.sum(p["x"]), {"x": jnp.ones((2, 1))},
+            jnp.zeros((2, 1, 1)), jnp.eye(2), jnp.ones(2, bool),
+            DPSGDConfig(local_steps=2))
+
+
 def test_convergence_to_consensus_optimum():
     """D-PSGD on split quadratic data converges near the global optimum."""
     n, d = 6, 3

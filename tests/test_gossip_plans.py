@@ -66,6 +66,54 @@ def test_mix_params_preserves_mean_tree():
                                    np.asarray(leaf.mean(0)), rtol=1e-5, atol=1e-6)
 
 
+def test_crosses_pod_exact_on_2x8_grid():
+    """DCI accounting must be per-round and exact: a round is charged DCI
+    time iff some source's leading (pod) coordinate actually changes under
+    its permutation (gossip.round_crosses_pod), not by shape heuristics."""
+    shape = (2, 8)
+
+    def brute(r):
+        trailing = 8
+        return any(src // trailing != dst // trailing
+                   for src, dst in r.perm(shape))
+
+    torus = gossip.torus_plan(("pod", "data"), shape)
+    ring = gossip.ring_plan(("pod", "data"), shape, 2)
+    cube = gossip.hypercube_plan(("pod", "data"), shape)
+    for plan in (torus, ring, cube):
+        for r in plan.rounds:
+            assert r.crosses_pod == gossip.round_crosses_pod(r, shape) \
+                == brute(r), (plan.name, r)
+    # torus: only the pod-axis antipode crosses; both data-axis shifts are
+    # confined to the trailing axis and must NOT be charged DCI time
+    assert [r.crosses_pod for r in torus.rounds] == [True, False, False]
+    # hypercube: data bits 0-2 stay inside the pod, bit 3 flips it
+    assert [r.crosses_pod for r in cube.rounds] == [False, False, False, True]
+    # flat ring shifts always wrap some source across the pod boundary
+    assert all(r.crosses_pod for r in ring.rounds)
+    # single-pod grids have no boundary at all
+    for plan in (gossip.torus_plan(("p", "d"), (1, 8)),
+                 gossip.ring_plan(("d",), (8,), 2)):
+        assert not any(r.crosses_pod for r in plan.rounds)
+
+
+def test_torus_2x8_dci_time_charges_only_pod_round():
+    """evaluate_plan must price the (2, 8) torus as one DCI round + two ICI
+    rounds — flagging the trailing-axis shifts too would overcharge it."""
+    from repro.core.comm_model import gossip_round_time_s
+    link = LinkModel(dci_penalty=8.0)
+    plan = gossip.torus_plan(("pod", "data"), (2, 8))
+    _, t = evaluate_plan(plan, 1e9, link)
+    want = gossip_round_time_s(
+        1e9, [r.arg for r in plan.rounds], link,
+        crosses_pod=[True, False, False])
+    overcharged = gossip_round_time_s(
+        1e9, [r.arg for r in plan.rounds], link,
+        crosses_pod=[True, True, True])
+    assert t == pytest.approx(want)
+    assert t < overcharged
+
+
 def test_controller_dci_penalty_prefers_sparse_cross_pod():
     """With expensive pod links and a loose lambda target, the controller must
     pick something cheaper than all-reduce (the paper's core effect)."""
