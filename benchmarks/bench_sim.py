@@ -12,11 +12,17 @@ Measures (median + min over several runs each):
   chunked channel + batched solvers): rounds/s and packets/s.
 * ``sweep``   — the ``sim.trace.sweep`` driver over a multi-seed,
   multi-scenario grid (Monte-Carlo style), rounds/s aggregate.
+* ``mac_compare`` — TDM vs random access head to head: the paper's CNN
+  trained through both MAC planes in one ``train_cnn_on_traces`` call,
+  emitting the accuracy-vs-**simulated-wall-clock** traces (the axis the
+  paper's runtime claim lives on) plus each plane's communication time.
 
 Cross-checks (``checks`` in the JSON, process exits 1 on any failure):
 
 * every batched solver == its ``*_reference`` (identical ``rates_bps``,
   ``t_com_s``, ``lam``) over random placements and lambda targets;
+* ``access_opt.solve_access`` (batched (p, R) sweep) == its pinned
+  sequential reference, same placements/targets;
 * a fast-MAC and a reference-MAC simulator run of the same scenario produce
   identical round durations / retx / outage / delivered fractions;
 * the static scenario still reproduces Eq. 3 to 1e-9 relative.
@@ -168,6 +174,58 @@ def check_mac(rounds: int) -> dict:
     return out
 
 
+def check_access(quick: bool) -> dict:
+    """Batched (p, R) sweep vs pinned sequential reference — bit-identical
+    over random placements and density targets (the RA-plane analogue of
+    ``check_solvers``)."""
+    from repro.core import access_opt
+
+    ok = True
+    seeds = range(2) if quick else range(5)
+    for seed in seeds:
+        n = 4 + seed % 3
+        pos = channel.random_placement(n, 200.0, seed=seed)
+        cap = channel.capacity_matrix(
+            pos, channel.ChannelParams(path_loss_exp=3.5 + 0.5 * seed))
+        for lam_t in (0.3, 0.7, -1.0):
+            a = access_opt.solve_access(cap, M_BITS, lam_t)
+            b = access_opt.solve_access_reference(cap, M_BITS, lam_t)
+            ok &= (np.array_equal(a.p, b.p)
+                   and np.array_equal(a.rates_bps, b.rates_bps)
+                   and a.t_round_s == b.t_round_s and a.lam == b.lam
+                   and a.feasible == b.feasible)
+    return {"solve_access": bool(ok)}
+
+
+def bench_mac_compare(quick: bool) -> dict:
+    """TDM vs random access on the same placement: train the paper's CNN
+    through both MAC planes (one batched scan/vmap call) and report the
+    accuracy-vs-simulated-time traces and communication times."""
+    import time as _time
+
+    from repro.sim import train_cnn_on_traces
+
+    n_train = 300 if quick else 1200
+    cfgs = [get_scenario("static", eval_every_rounds=2),
+            get_scenario("ra_static", eval_every_rounds=2),
+            get_scenario("ra_capture", eval_every_rounds=2)]
+    t0 = _time.perf_counter()
+    traces, out = train_cnn_on_traces(cfgs, epochs=1, n_train=n_train,
+                                      n_test=150)
+    dt = _time.perf_counter() - t0
+    result: dict = {"t_wall_s": dt, "rounds": traces.n_rounds, "planes": {}}
+    for k, cfg in enumerate(cfgs):
+        s = traces.traces[k].trace.summary()
+        result["planes"][cfg.name] = {
+            "mac_kind": cfg.mac_kind,
+            "comm_s": s["total_comm_s"],
+            "outage_rate": s["outage_rate"],
+            "final_acc": float(out["acc"][k, -1]),
+            "curve": [[float(t), float(a)] for t, a in out["curves"][k]],
+        }
+    return result
+
+
 def bench_sweep(quick: bool) -> dict:
     seeds = range(2) if quick else range(5)
     configs = [get_scenario(name, seed=s, solver="greedy")
@@ -201,14 +259,17 @@ def main(argv=None) -> int:
         "solver": bench_solver(reps),
         "sim": bench_sim(reps, rounds),
         "sweep": bench_sweep(args.quick),
+        "mac_compare": bench_mac_compare(args.quick),
         "checks": {
             "solver": check_solvers(args.quick),
+            "access": check_access(args.quick),
             "mac": check_mac(4 if args.quick else 8),
         },
     }
     checks = result["checks"]
     failed = (not result["solver"]["match"]
               or not all(checks["solver"].values())
+              or not all(checks["access"].values())
               or not all(v for k, v in checks["mac"].items()
                          if isinstance(v, bool)))
     result["ok"] = not failed

@@ -19,31 +19,66 @@ Three demos, all on the paper's setup (n=6 nodes, 200 m square, the
    Monte-Carlo family trained in ONE jitted scan/vmap call
    (``sim.batch.train_cnn_on_traces``); prints the per-seed
    accuracy-vs-simulated-time curves.
+5. ``--mac-compare`` — TDM vs random access head to head: the CNN trained
+   through both MAC planes on the same placement, accuracy stamped with
+   each plane's own simulated clock (collision-free schedule vs
+   slots-until-coverage contention).
+
+``--scenario PATTERN`` restricts the ``--compare`` table to scenarios whose
+name matches the glob (e.g. ``--scenario 'ra_*'`` for the random-access
+family).
 
 Usage:
     PYTHONPATH=src python -m examples.sim_scenarios
+    PYTHONPATH=src python -m examples.sim_scenarios --scenario 'ra_*'
     PYTHONPATH=src python -m examples.sim_scenarios --train fading
     PYTHONPATH=src python -m examples.sim_scenarios --margin-sweep
     PYTHONPATH=src python -m examples.sim_scenarios --train-sweep fading --seeds 4
+    PYTHONPATH=src python -m examples.sim_scenarios --mac-compare
 """
 from __future__ import annotations
 
 import argparse
+import fnmatch
 
 from repro.sim import (WirelessSimulator, get_scenario, list_scenarios,
                        simulate_dpsgd_cnn, train_cnn_on_traces)
 
 
-def compare(rounds: int, solver: str) -> None:
-    print(f"{'scenario':>10} {'comm_s':>9} {'outage':>7} {'retx':>6} "
-          f"{'replans':>7} {'fails':>5} {'n_end':>5}")
-    for name in list_scenarios():
+def compare(rounds: int, solver: str, pattern: str = "*") -> None:
+    names = [n for n in list_scenarios() if fnmatch.fnmatch(n, pattern)]
+    if not names:
+        raise SystemExit(f"no registered scenario matches {pattern!r}")
+    print(f"{'scenario':>10} {'mac':>6} {'comm_s':>9} {'outage':>7} "
+          f"{'retx':>6} {'replans':>7} {'fails':>5} {'n_end':>5}")
+    for name in names:
         cfg = get_scenario(name, solver=solver)
         trace = WirelessSimulator(cfg).run(rounds)
         s = trace.summary()
-        print(f"{name:>10} {s['total_comm_s']:>9.2f} {s['outage_rate']:>7.2%} "
+        mac = "ra" if cfg.mac_kind == "random_access" else "tdm"
+        print(f"{name:>10} {mac:>6} {s['total_comm_s']:>9.2f} "
+              f"{s['outage_rate']:>7.2%} "
               f"{s['retx_packets']:>6d} {s['replans']:>7d} "
               f"{s['failures']:>5d} {s['final_n_live']:>5d}")
+
+
+def mac_compare(epochs: int) -> None:
+    """Same placement, same CNN, two MACs: accuracy vs each plane's own
+    simulated wall-clock — what collision-free scheduling is worth."""
+    cfgs = [get_scenario("static", eval_every_rounds=2),
+            get_scenario("ra_static", eval_every_rounds=2),
+            get_scenario("ra_capture", eval_every_rounds=2)]
+    traces, out = train_cnn_on_traces(cfgs, epochs=epochs, n_train=600,
+                                      n_test=150)
+    print("scenario,mac,t_sim_s,accuracy")
+    for k, cfg in enumerate(cfgs):
+        mac = "ra" if cfg.mac_kind == "random_access" else "tdm"
+        for t, acc in out["curves"][k]:
+            print(f"{cfg.name},{mac},{t:.2f},{acc:.4f}")
+    for k, cfg in enumerate(cfgs):
+        s = traces.traces[k].trace.summary()
+        print(f"# {cfg.name}: comm {s['total_comm_s']:.1f}s, "
+              f"final acc {out['acc'][k, -1]:.4f}")
 
 
 def train(name: str, epochs: int, solver: str) -> None:
@@ -103,6 +138,10 @@ def main(argv: list[str] | None = None) -> None:
                       choices=list_scenarios(),
                       help="Monte-Carlo family via the batched scan path")
     mode.add_argument("--margin-sweep", action="store_true")
+    mode.add_argument("--mac-compare", action="store_true",
+                      help="TDM vs random-access accuracy-vs-sim-time")
+    p.add_argument("--scenario", default="*", metavar="PATTERN",
+                   help="glob filter for --compare (e.g. 'ra_*')")
     p.add_argument("--rounds", type=int, default=20)
     p.add_argument("--epochs", type=int, default=2)
     p.add_argument("--seeds", type=int, default=4,
@@ -116,8 +155,10 @@ def main(argv: list[str] | None = None) -> None:
         train_sweep(args.train_sweep, args.seeds, args.epochs, args.solver)
     elif args.margin_sweep:
         margin_sweep(args.rounds, args.solver)
+    elif args.mac_compare:
+        mac_compare(args.epochs)
     else:
-        compare(args.rounds, args.solver)
+        compare(args.rounds, args.solver, args.scenario)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ __all__ = [
     "received_power_dbm",
     "snr_linear",
     "capacity_bps",
+    "snr_from_capacity",
     "capacity_matrix",
     "pairwise_distances",
     "random_placement",
@@ -61,6 +62,17 @@ def capacity_bps(d: np.ndarray, params: ChannelParams) -> np.ndarray:
     """Shannon capacity C(d) = B log2(1 + gamma(d)/B) [bps] (Eq. 2)."""
     g = snr_linear(d, params)
     return params.bandwidth_hz * np.log2(1.0 + g / params.bandwidth_hz)
+
+
+def snr_from_capacity(c_bps: np.ndarray, bandwidth_hz: float) -> np.ndarray:
+    """Invert Eq. 2: gamma = B * (2**(C/B) - 1), the linear SNR that yields
+    capacity ``c_bps`` at bandwidth ``bandwidth_hz``. Used by the random-
+    access MAC, which needs received *powers* (to sum interference into an
+    SINR) but is handed *capacities* by the channel plane. C = 0 maps to
+    gamma = 0 and C = +inf (the self-link diagonal) to gamma = +inf."""
+    c = np.asarray(c_bps, dtype=np.float64)
+    with np.errstate(over="ignore"):
+        return bandwidth_hz * (2.0 ** (c / bandwidth_hz) - 1.0)
 
 
 def pairwise_distances(positions: np.ndarray) -> np.ndarray:

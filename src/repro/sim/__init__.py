@@ -14,8 +14,12 @@ Modules:
 * ``events``   — deterministic event queue + simulated clock
 * ``fading``   — Rayleigh/shadowing ``C_ij(t)`` over ``core.channel``
 * ``mac``      — packet-level TDM broadcast, outage, retransmission
+* ``mac_ra``   — slotted random-access broadcast: contention, collisions,
+  SINR capture, slots-until-coverage airtime (planned by
+  ``core.access_opt``)
 * ``mobility`` — waypoint/cluster motion + Poisson churn
-* ``scenario`` — named scenario registry (static/fading/mobile/churn/mixed)
+* ``scenario`` — named scenario registry (static/fading/mobile/churn/mixed
+  + the ``ra_*`` random-access family)
 * ``trace``    — event loop, per-round traces, accuracy-vs-simulated-time,
   driver-less ``precompute_trace`` (fixed-shape channel realizations)
 * ``batch``    — train-on-trace: jitted ``lax.scan`` training over
@@ -26,10 +30,11 @@ from .events import Event, EventKind, EventQueue, SimClock
 from .fading import FadingChannel, FadingParams
 from .mac import (MacParams, RoundResult, mean_drift, tdm_round,
                   tdm_round_reference)
+from .mac_ra import RAParams, ra_round
 from .mobility import (ClusterMobility, PoissonChurn, RandomWaypoint,
                        StaticMobility, make_mobility)
-from .scenario import (DEFAULT_MODEL_BITS, ScenarioConfig, get_scenario,
-                       list_scenarios, register)
+from .scenario import (DEFAULT_MODEL_BITS, MAC_KINDS, ScenarioConfig,
+                       get_scenario, list_scenarios, register)
 from .trace import (RoundContext, RoundRecord, SimTrace, TraceBatch,
                     TrainTrace, WirelessSimulator, precompute_trace,
                     precompute_traces, simulate_dpsgd_cnn, stack_traces,
@@ -40,10 +45,11 @@ __all__ = [
     "FadingChannel", "FadingParams",
     "MacParams", "RoundResult", "mean_drift", "tdm_round",
     "tdm_round_reference",
+    "RAParams", "ra_round",
     "ClusterMobility", "PoissonChurn", "RandomWaypoint", "StaticMobility",
     "make_mobility",
-    "DEFAULT_MODEL_BITS", "ScenarioConfig", "get_scenario", "list_scenarios",
-    "register",
+    "DEFAULT_MODEL_BITS", "MAC_KINDS", "ScenarioConfig", "get_scenario",
+    "list_scenarios", "register",
     "RoundContext", "RoundRecord", "SimTrace", "TraceBatch", "TrainTrace",
     "WirelessSimulator", "precompute_trace", "precompute_traces",
     "simulate_dpsgd_cnn", "stack_traces", "sweep",

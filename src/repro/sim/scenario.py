@@ -17,6 +17,13 @@ vocabulary:
   ``runtime.fault.ElasticController`` (survivor replan + elastic reshape).
 * ``mixed``   — cluster mobility + fading + churn + periodic replan, all at
   once; the stress case.
+* ``ra_static`` / ``ra_fading`` / ``ra_capture`` — the same worlds under the
+  **random-access broadcast MAC** (``mac_kind="random_access"``): slotted
+  contention instead of a TDM schedule, ``core.access_opt`` choosing
+  ``(p_i, R_i)`` instead of Algorithm 2's rates alone, and a mixing graph
+  that is random per round (collision-sampled subgraphs). ``ra_capture``
+  adds an SINR capture threshold, so the strongest of colliding signals can
+  still get through.
 
 Register custom scenarios with ``register``; fetch-and-override with
 ``get_scenario(name, **overrides)``.
@@ -29,9 +36,12 @@ from typing import Optional
 from ..core.channel import ChannelParams
 from .fading import FadingParams
 from .mac import MacParams
+from .mac_ra import RAParams
 
 __all__ = ["ScenarioConfig", "register", "get_scenario", "list_scenarios",
-           "DEFAULT_MODEL_BITS"]
+           "DEFAULT_MODEL_BITS", "MAC_KINDS"]
+
+MAC_KINDS = ("tdm", "random_access")
 
 # paper §IV-A message size: the 21 840-param CNN at float32
 # (== models.cnn.MODEL_BITS; cross-checked in tests/test_sim.py — the sim
@@ -67,8 +77,11 @@ class ScenarioConfig:
     n_clusters: int = 2
     cluster_spread_m: float = 20.0
     churn_rate_per_s: float = 0.0
-    # link layer
+    # link layer: "tdm" (the paper's collision-free schedule, MacParams) or
+    # "random_access" (slotted contention broadcast, RAParams + access_opt)
+    mac_kind: str = "tdm"
     mac: MacParams = dataclasses.field(default_factory=MacParams)
+    ra: RAParams = dataclasses.field(default_factory=RAParams)
     reference_mac: bool = False        # pinned per-packet loop MAC (benchmarks)
     # replan policy (Algorithm 2 re-runs)
     solver: str = "auto"               # rate_opt.solve method (auto = exact)
@@ -76,6 +89,19 @@ class ScenarioConfig:
     replan_drift_rel: float = 0.0      # 0 = never on drift
     # evaluation cadence for training traces
     eval_every_rounds: int = 4
+
+    def __post_init__(self):
+        if self.mac_kind not in MAC_KINDS:
+            raise ValueError(
+                f"mac_kind must be one of {MAC_KINDS}, got {self.mac_kind!r}")
+        if self.mac_kind == "random_access" and self.reference_mac:
+            # there is no pinned-loop RA MAC; silently running ra_round on a
+            # config that asked for the reference would make fast-vs-
+            # reference cross-checks pass vacuously
+            raise ValueError(
+                "reference_mac applies to the TDM MAC only; the "
+                "random-access plane has a single implementation "
+                "(its pinned reference is access_opt.solve_access_reference)")
 
     def channel_params(self) -> ChannelParams:
         return ChannelParams(
@@ -142,6 +168,35 @@ register(ScenarioConfig(
 register(ScenarioConfig(
     name="churn",
     churn_rate_per_s=0.15,
+))
+
+register(ScenarioConfig(
+    name="ra_static",
+    mac_kind="random_access",
+))
+
+register(ScenarioConfig(
+    name="ra_fading",
+    mac_kind="random_access",
+    fading=FadingParams(rayleigh=True, shadowing_sigma_db=3.0,
+                        shadowing_corr=0.9, coherence_s=0.01),
+    fading_margin_bps=2e6,
+    lambda_target=0.5,
+    # a binding slot budget: links that lose the contention + fading race
+    # drop out of that round's W — the subgraph-sampled mixing graph of
+    # Herrera et al., random per round
+    ra=RAParams(max_slots=24),
+))
+
+register(ScenarioConfig(
+    name="ra_capture",
+    mac_kind="random_access",
+    # 6 dB SINR capture: the strongest colliding broadcast can still decode,
+    # so coverage needs fewer slots than the pure-collision model; the
+    # sparser density target (higher rates, shorter slots) makes contention
+    # the binding constraint rather than slot airtime
+    lambda_target=0.5,
+    ra=RAParams(capture_db=6.0),
 ))
 
 register(ScenarioConfig(

@@ -2,8 +2,11 @@
 
 ``WirelessSimulator`` ties the subsystem together: one ``EventQueue`` orders
 round starts against Poisson churn arrivals; each ``ROUND_START`` first
-applies any due churn/replan, then runs a packet-level TDM round
-(``mac.tdm_round``) over the
+applies any due churn/replan, then runs one MAC mixing round — a
+packet-level TDM round (``mac.tdm_round``) or, with
+``cfg.mac_kind == "random_access"``, a slotted contention round
+(``mac_ra.ra_round``, planned by ``core.access_opt`` instead of
+Algorithm 2) — over the
 instantaneous channel (``fading.FadingChannel`` on the current
 ``mobility`` positions) and emits a ``RoundRecord``. The clock advances
 through *simulated* seconds — airtime plus compute — so traces are
@@ -34,11 +37,13 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from ..core.access_opt import solve_access, solve_access_reference
 from ..core.topology import adjacency_from_rates, spectral_lambda
 from ..runtime.fault import ElasticController
 from .events import EventKind, EventQueue, SimClock
 from .fading import FadingChannel
 from .mac import RoundResult, mean_drift, tdm_round, tdm_round_reference
+from .mac_ra import ra_round
 from .mobility import PoissonChurn, make_mobility
 from .scenario import ScenarioConfig, get_scenario
 
@@ -131,7 +136,7 @@ class RoundContext:
     churn: list[list[int]]               # survivor rows (state space) per event
     result: RoundResult
     w_eff: np.ndarray
-    solution: object                     # rate_opt.RateSolution
+    solution: object          # rate_opt.RateSolution | access_opt.AccessSolution
     replanned: bool
 
 
@@ -182,11 +187,25 @@ class WirelessSimulator:
 
     # -- planning ------------------------------------------------------------
     def _replan(self):
-        """Re-run Algorithm 2 (via the elastic controller) on the current
-        mean capacity of the live node set."""
+        """Re-run the MAC's planner on the current mean capacity of the live
+        node set: Algorithm 2 (via the elastic controller) for TDM, or the
+        ``access_opt`` (p, R) sweep for the random-access MAC (reference
+        path when ``cfg.solver`` names a ``*_reference`` method). The RA
+        plan always uses the conservative pure-collision surrogate — an
+        SINR capture threshold only makes realized rounds faster than
+        planned (see ``core.access_opt``)."""
         m = self._mean_capacity()
         self.controller.capacity = m
-        self.solution = self.controller.replan()
+        if self.cfg.mac_kind == "random_access":
+            solver = (solve_access_reference
+                      if self.cfg.solver.endswith("_reference")
+                      else solve_access)
+            self.solution = solver(
+                m, self.cfg.model_bits, self.cfg.lambda_target,
+                bandwidth_hz=self.cfg.bandwidth_hz,
+                interference_min_snr=self.cfg.ra.interference_min_snr)
+        else:
+            self.solution = self.controller.replan()
         self._plan_cap = m
         self._intended = adjacency_from_rates(
             m, self.solution.rates_bps).astype(bool)
@@ -232,7 +251,14 @@ class WirelessSimulator:
 
         pos_round = self._positions()
         self._cap_cache = None
-        if cfg.reference_mac:
+        if cfg.mac_kind == "random_access":
+            result = ra_round(
+                self.clock, self.solution.rates_bps, self.solution.p,
+                self._intended, cfg.model_bits,
+                lambda t: self._capacity_at(pos_round, t), cfg.ra,
+                bandwidth_hz=cfg.bandwidth_hz, round_index=self._round,
+                seed=cfg.seed)
+        elif cfg.reference_mac:
             result = tdm_round_reference(
                 self.clock, self.solution.rates_bps, self._intended,
                 cfg.model_bits, lambda t: self._capacity_at(pos_round, t),

@@ -5,7 +5,8 @@ import pytest
 
 from repro.configs.base import RunConfig
 from repro.core import gossip
-from repro.core.compression import QuantConfig, compression_ratio
+from repro.core.compression import (_BLOCK, QuantConfig, compression_ratio,
+                                    dequantize_int8, quantize_int8)
 from repro.train.step import _mix_leaf, _quantize_rowwise_int8, mix_params
 
 
@@ -46,6 +47,56 @@ def test_error_feedback_keeps_consensus_unbiased():
         x, res = mixed["w"], newres["w"]
     spread = float(jnp.linalg.norm(x - x.mean(0)))
     assert spread < 0.05 * spread0
+
+
+@pytest.mark.parametrize("n", [1, 7, _BLOCK - 1, _BLOCK, _BLOCK + 1,
+                               3 * _BLOCK + 517])
+def test_blockwise_quant_roundtrip_bounded(n):
+    """Per-block affine int8: every element's round-trip error is bounded by
+    half its block's scale, for lengths that are not multiples of the block
+    (the tail block is zero-padded, which must not perturb the payload)."""
+    x = jax.random.normal(jax.random.key(n), (n,)) * 7.0
+    q, scale, n_out = quantize_int8(x)
+    assert n_out == n
+    deq = np.asarray(dequantize_int8(q, scale, n))
+    assert deq.shape == (n,)
+    per_elem_scale = np.repeat(np.asarray(scale), _BLOCK)[:n]
+    err = np.abs(deq - np.asarray(x))
+    assert np.all(err <= per_elem_scale * 0.5 + 1e-6)
+
+
+def test_blockwise_quant_zero_blocks_exact():
+    """An all-zero block quantizes to scale 1 / payload 0 and round-trips
+    exactly; neighboring nonzero blocks are untouched by it."""
+    x = jnp.concatenate([jnp.zeros(_BLOCK),
+                         jnp.ones(_BLOCK) * 3.25,
+                         jnp.zeros(257)])
+    q, scale, n = quantize_int8(x)
+    deq = np.asarray(dequantize_int8(q, scale, n))
+    assert (deq[:_BLOCK] == 0.0).all()
+    assert (deq[2 * _BLOCK:] == 0.0).all()
+    assert float(scale[0]) == 1.0 and float(scale[2]) == 1.0
+    np.testing.assert_allclose(deq[_BLOCK:2 * _BLOCK], 3.25, rtol=1e-6)
+
+
+def test_error_feedback_mixing_keeps_row_sums_at_one():
+    """Compressed gossip must still be an averaging operator: mixing a
+    node-constant state returns it (the W row sums stay at 1 — the self
+    term is exact and neighbor messages dequantize back to the constant),
+    and the residual absorbs exactly the quantization error."""
+    plan = gossip.ring_plan(("d",), (8,), 2)
+    c = 3.7
+    x = jnp.full((8, 96), c, dtype=jnp.float32)
+    res = jnp.zeros_like(x)
+    # int8: the max element quantizes to exactly +-127, so the constant
+    # round-trips to float precision; bf16 messages carry 8 mantissa bits
+    # (relative step 2^-9)
+    for mode, rtol in (("int8", 1e-5), ("bf16", 2.0 ** -8)):
+        mixed, new_res = mix_params({"w": x}, {"w": res}, plan,
+                                    RunConfig(compression=mode))
+        np.testing.assert_allclose(np.asarray(mixed["w"]), c, rtol=rtol)
+        # residual == carried - dequantized message, bounded by the quant step
+        assert float(jnp.abs(new_res["w"]).max()) <= abs(c) / 127.0 + 1e-6
 
 
 def test_compression_ratio_math():

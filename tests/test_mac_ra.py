@@ -1,0 +1,349 @@
+"""Random-access MAC plane: contention semantics, (p, R) optimization,
+shared effective-W invariants, registry-wide runnability, and RA
+driver-vs-scan training parity.
+
+The load-bearing pins:
+
+* ``solve_access`` (batched sweep) must equal ``solve_access_reference``
+  (the retained sequential loop) bit for bit — the acceptance criterion of
+  the RA plane, same contract as ``rate_opt``'s ``*_reference`` pins.
+* every registered scenario (TDM and RA alike) must build, precompute a
+  trace, and train on it — the registry smoke that keeps future scenarios
+  runnable end to end.
+* the batched scan path must reproduce the per-round driver on an RA
+  scenario to <= 1e-5 — random per-round W threaded through ``embed_w``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import access_opt, channel, rate_opt
+from repro.core.topology import adjacency_from_rates, paper_w
+from repro.sim import (EventKind, EventQueue, MacParams, RAParams, SimClock,
+                       WirelessSimulator, get_scenario, list_scenarios,
+                       precompute_trace, ra_round, tdm_round,
+                       tdm_round_reference)
+from repro.sim.mac_ra import slot_duration_s
+
+BW = 20e6
+M_BITS = 698_880.0
+
+
+def _static_cap(n=4, d=50.0):
+    """Symmetric grid placement -> finite static capacity matrix."""
+    pos = np.array([[d * (i % 2), d * (i // 2)] for i in range(n)], float)
+    return channel.capacity_matrix(
+        pos, channel.ChannelParams(path_loss_exp=3.5, bandwidth_hz=BW))
+
+
+# ---------------------------------------------------------------------------
+# RA round semantics
+# ---------------------------------------------------------------------------
+
+def test_slot_duration_is_model_over_slowest_rate():
+    assert slot_duration_s(1e6, np.array([1e6, 2e6, 4e6])) == 1.0
+    assert slot_duration_s(1e6, np.array([np.inf, 0.0])) == 0.0
+    assert slot_duration_s(1e6, np.array([np.inf, 5e5])) == 2.0
+
+
+def _one_round(p, ra, cap=None, seed=0, rates=None, model_bits=1e6):
+    cap = _static_cap() if cap is None else cap
+    n = cap.shape[0]
+    rates = np.full(n, 1e6) if rates is None else rates
+    intended = np.ones((n, n), dtype=bool)
+    clock = SimClock()
+    res = ra_round(clock, rates, np.full(n, p), intended, model_bits,
+                   lambda t: cap, ra, bandwidth_hz=BW, seed=seed)
+    return res, clock
+
+
+def test_ra_round_covers_all_links_and_matches_plan_w():
+    res, clock = _one_round(0.35, RAParams(max_slots=4096))
+    assert (res.delivered | ~res.intended).all()
+    assert res.outage_links == 0
+    # duration is an integer number of slots
+    slot = 1e6 / 1e6
+    n_slots = res.duration_s / slot
+    assert n_slots == pytest.approx(round(n_slots))
+    assert 1 <= n_slots <= 4096
+
+
+def test_ra_round_deterministic_replay():
+    a, _ = _one_round(0.3, RAParams(max_slots=64), seed=5)
+    b, _ = _one_round(0.3, RAParams(max_slots=64), seed=5)
+    np.testing.assert_array_equal(a.delivered, b.delivered)
+    assert a.duration_s == b.duration_s
+    assert a.packets_first_pass == b.packets_first_pass
+    assert a.retx_packets == b.retx_packets
+    c, _ = _one_round(0.3, RAParams(max_slots=64), seed=6)
+    assert (not np.array_equal(a.delivered, c.delivered)
+            or a.duration_s != c.duration_s)
+
+
+def test_ra_collisions_block_and_budget_drops_links():
+    """p = 1: everyone transmits every slot, nobody can receive
+    (half-duplex + collisions) -> zero delivery, budget exhausted, and the
+    realized W degrades to identity (every row re-normalized to self)."""
+    res, _ = _one_round(1.0, RAParams(max_slots=8))
+    assert not res.delivered.any()
+    assert res.duration_s == pytest.approx(8 * 1.0)
+    assert res.outage_links == int(res.intended.sum())
+    np.testing.assert_array_equal(res.effective_w(), np.eye(4))
+
+
+def test_ra_capture_rescues_strongest_link():
+    """Two simultaneous transmitters: pure collision kills both broadcasts,
+    a capture threshold lets the much stronger signal through. Node layout:
+    0 and 3 transmit, receiver 1 sits next to 0 and far from 3."""
+    pos = np.array([[0.0, 0.0], [10.0, 0.0], [15.0, 0.0], [200.0, 0.0]])
+    cap = channel.capacity_matrix(
+        pos, channel.ChannelParams(path_loss_exp=3.5, bandwidth_hz=BW))
+    rates = np.minimum(cap[:, 1], 5e6)       # everyone could reach node 1
+    from repro.sim.mac_ra import _decode_mask
+    tx = np.array([True, False, False, True])
+    blocked = _decode_mask(cap, tx, rates, BW, RAParams())
+    captured = _decode_mask(cap, tx, rates, BW, RAParams(capture_db=6.0))
+    assert not blocked[0, 1]                 # collision model: 3 jams 0 -> 1
+    assert captured[0, 1]                    # capture: 0's power dominates
+    assert not captured[3, 1]                # ... and 3 loses the capture
+    # an isolated transmission never needs capture (no absolute SNR floor)
+    solo = _decode_mask(cap, np.array([True, False, False, False]), rates,
+                        BW, RAParams(capture_db=6.0))
+    assert solo[0, 1]
+
+
+def test_ra_half_duplex_transmitters_never_receive():
+    """Two nodes, both at p = 1: every slot is collision-free from the
+    receiver's perspective (the only other in-range transmitter would be the
+    receiver itself), so the ONLY thing stopping delivery is half-duplex —
+    a transmitting node cannot decode its peer's broadcast."""
+    pos = np.array([[0.0, 0.0], [30.0, 0.0]])
+    cap = channel.capacity_matrix(
+        pos, channel.ChannelParams(path_loss_exp=3.5, bandwidth_hz=BW))
+    rates = np.full(2, 1e6)
+    clock = SimClock()
+    res = ra_round(clock, rates, np.ones(2), np.ones((2, 2), bool), 1e6,
+                   lambda t: cap, RAParams(max_slots=16), bandwidth_hz=BW)
+    assert not res.delivered.any()
+    assert res.outage_links == 2
+    # same links deliver immediately once the peer is silent
+    clock = SimClock()
+    res = ra_round(clock, rates, np.array([1.0, 0.0]), np.ones((2, 2), bool),
+                   1e6, lambda t: cap, RAParams(max_slots=16),
+                   bandwidth_hz=BW)
+    assert res.delivered[0, 1] and not res.delivered[1].any()
+
+
+def test_ra_round_logs_slot_events():
+    q = EventQueue()
+    clock = SimClock()
+    cap = _static_cap()
+    ra_round(clock, np.full(4, 1e6), np.full(4, 0.5),
+             np.ones((4, 4), bool), 1e6, lambda t: cap,
+             RAParams(max_slots=16), bandwidth_hz=BW, seed=1, queue=q)
+    events = list(q.drain())
+    assert events and all(e.kind in (EventKind.PACKET_TX,
+                                     EventKind.PACKET_RETX) for e in events)
+    times = [e.time_s for e in events]
+    assert times == sorted(times)
+
+
+def test_ra_round_silent_when_no_rates():
+    cap = _static_cap()
+    clock = SimClock()
+    res = ra_round(clock, np.zeros(4), np.full(4, 0.5), np.ones((4, 4), bool),
+                   1e6, lambda t: cap, RAParams(), bandwidth_hz=BW)
+    assert res.duration_s == 0.0 and not res.delivered.any()
+
+
+# ---------------------------------------------------------------------------
+# Access optimization: batched == pinned sequential reference (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,eps,lam_t", [
+    (0, 5.0, 0.3), (1, 3.5, 0.5), (2, 4.0, 0.7), (3, 5.0, -1.0), (4, 3.0, 0.9),
+])
+def test_solve_access_bit_identical_to_reference(seed, eps, lam_t):
+    n = 4 + seed % 3
+    pos = channel.random_placement(n, 200.0, seed=seed)
+    cap = channel.capacity_matrix(pos,
+                                  channel.ChannelParams(path_loss_exp=eps))
+    a = access_opt.solve_access(cap, M_BITS, lam_t)
+    b = access_opt.solve_access_reference(cap, M_BITS, lam_t)
+    np.testing.assert_array_equal(a.p, b.p)
+    np.testing.assert_array_equal(a.rates_bps, b.rates_bps)
+    assert a.slot_s == b.slot_s
+    assert a.exp_slots == b.exp_slots
+    assert a.t_round_s == b.t_round_s
+    assert a.lam == b.lam
+    assert a.feasible == b.feasible
+    np.testing.assert_array_equal(a.w, b.w)
+
+
+def test_solve_access_respects_density_target():
+    cap = _static_cap(n=5, d=40.0)
+    sol = access_opt.solve_access(cap, M_BITS, 0.5, bandwidth_hz=BW)
+    assert sol.feasible and sol.lam <= 0.5 + 1e-9
+    assert 0.0 < sol.p[0] < 1.0 and (sol.p == sol.p[0]).all()
+    assert sol.slot_s == M_BITS / sol.rates_bps.min()
+    assert sol.t_round_s == pytest.approx(sol.slot_s * sol.exp_slots)
+    assert np.isfinite(sol.t_tdm_s)
+    # impossible target: infeasible fallback is the densest (min-lambda) plan
+    bad = access_opt.solve_access(cap, M_BITS, -1.0, bandwidth_hz=BW)
+    assert not bad.feasible
+
+
+def test_solve_access_p_on_grid_near_aloha_optimum():
+    """With every node inside every receiver's interference range the
+    surrogate is maximized at p* = 1/(e+1) for exponent e = n-1 — the
+    classic slotted-ALOHA operating point, which sits on the default grid."""
+    cap = _static_cap(n=6, d=30.0)
+    sol = access_opt.solve_access(cap, M_BITS, 0.9, bandwidth_hz=BW)
+    assert sol.p[0] == pytest.approx(1.0 / 6.0)
+
+
+# ---------------------------------------------------------------------------
+# Effective-W invariants shared by every MAC implementation
+# ---------------------------------------------------------------------------
+
+def _run_mac(kind: str, cap, rates, intended, model_bits):
+    clock = SimClock()
+    if kind == "tdm":
+        return tdm_round(clock, rates, intended, model_bits, lambda t: cap,
+                         MacParams())
+    if kind == "tdm_reference":
+        return tdm_round_reference(clock, rates, intended, model_bits,
+                                   lambda t: cap, MacParams())
+    return ra_round(clock, rates, np.full(rates.shape[0], 0.35), intended,
+                    model_bits, lambda t: cap, RAParams(max_slots=4096),
+                    bandwidth_hz=BW, seed=3)
+
+
+@pytest.mark.parametrize("kind", ["tdm", "tdm_reference", "ra"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_effective_w_invariants_all_macs(kind, seed):
+    """Every MAC realizes a row-stochastic W whose self-weights can only
+    grow relative to the plan (delivery is a subset of intent), and with
+    zero outage/collision-loss probability realizes the plan's reception
+    W exactly."""
+    pos = channel.random_placement(5, 200.0, seed=seed)
+    cap = channel.capacity_matrix(pos,
+                                  channel.ChannelParams(path_loss_exp=4.0))
+    sol = rate_opt.solve(cap, 1e6, 0.8, method="greedy")
+    intended = adjacency_from_rates(cap, sol.rates_bps).astype(bool)
+    res = _run_mac(kind, cap, sol.rates_bps, intended, 1e6)
+    w = res.effective_w()
+    np.testing.assert_allclose(w.sum(axis=1), 1.0)
+    # plan reception W: Eq. 4 on "who can hear whom" of the planned rates
+    a_recv = adjacency_from_rates(cap, sol.rates_bps, reception_based=True)
+    w_plan = paper_w(a_recv)
+    assert (np.diag(w) >= np.diag(w_plan) - 1e-12).all()
+    # static channel + feasible plan (TDM) / coverage reached (RA, ample
+    # slot budget): zero loss probability => the realized W IS the plan W
+    assert res.outage_links == 0
+    np.testing.assert_allclose(w, w_plan)
+
+
+@pytest.mark.parametrize("kind", ["tdm", "tdm_reference", "ra"])
+def test_effective_w_invariants_under_losses(kind):
+    """Partial delivery keeps rows stochastic and never shrinks the
+    self-weight below the plan's."""
+    cap = _static_cap(n=4, d=60.0)
+    cap[0, 2] = cap[2, 0] = 1e5          # deep-fade link
+    rates = np.full(4, 1e6)
+    intended = np.ones((4, 4), dtype=bool)
+    if kind == "ra":
+        clock = SimClock()
+        res = ra_round(clock, rates, np.full(4, 0.5), intended, 1e6,
+                       lambda t: cap, RAParams(max_slots=6),
+                       bandwidth_hz=BW, seed=0)
+    else:
+        res = _run_mac(kind, cap, rates, intended, 1e6)
+    assert res.outage_links > 0
+    w = res.effective_w()
+    np.testing.assert_allclose(w.sum(axis=1), 1.0)
+    w_plan = paper_w(adjacency_from_rates(cap, rates, reception_based=True))
+    assert (np.diag(w) >= np.diag(w_plan) - 1e-12).all()
+
+
+# ---------------------------------------------------------------------------
+# Registry-wide scenario smoke: build -> precompute -> train
+# ---------------------------------------------------------------------------
+
+def _toy_loss(p, b):
+    import jax.numpy as jnp
+    return jnp.mean((p["x"] - b["target"]) ** 2)
+
+
+@pytest.mark.parametrize("name", list_scenarios())
+def test_every_registered_scenario_precomputes_and_trains(name):
+    """Pin that every registered config stays runnable end to end: build,
+    precompute a 3-round trace, and train on it through the jitted scan."""
+    import jax.numpy as jnp
+
+    from repro.sim import train_on_trace
+
+    cfg = get_scenario(name, solver="greedy", compute_s_per_round=0.01)
+    tr = precompute_trace(cfg, 3)
+    assert tr.n_rounds == 3 and tr.cfg == cfg
+    n = cfg.n_nodes
+    assert tr.w_eff.shape == (3, n, n) and tr.live.shape == (3, n)
+    np.testing.assert_allclose(tr.w_eff.sum(axis=-1), 1.0)
+    assert (np.diff(tr.t_start_s) > 0).all()
+    assert (tr.t_comm_s > 0).all()
+
+    params = {"x": jnp.zeros((n, 4))}
+    batches = {"target": jnp.ones((3, n, 4))}
+    final, losses = train_on_trace(_toy_loss, params,
+                                   jnp.asarray(tr.w_eff),
+                                   jnp.asarray(tr.live), batches)
+    assert np.asarray(losses).shape == (3, n)
+    assert np.isfinite(np.asarray(losses)[np.asarray(tr.live)]).all()
+    # gradient descent toward the shared target actually happened
+    assert float(np.asarray(losses)[-1][tr.live[-1]].mean()) < 1.0
+
+
+def test_ra_scenarios_registered():
+    names = list_scenarios()
+    assert sum(n.startswith("ra_") for n in names) >= 2
+    for required in ("ra_static", "ra_fading", "ra_capture"):
+        assert required in names
+    with pytest.raises(ValueError, match="mac_kind"):
+        get_scenario("static", mac_kind="csma")
+    # no pinned-loop RA MAC exists: asking for it must fail loudly instead
+    # of silently running ra_round on both sides of a cross-check
+    with pytest.raises(ValueError, match="reference_mac"):
+        get_scenario("ra_static", reference_mac=True)
+
+
+def test_ra_fading_samples_random_per_round_w():
+    """The binding slot budget makes the realized mixing matrix random per
+    round — the subgraph-sampled gossip regime the trace plane exists for."""
+    tr = precompute_trace("ra_fading", 6)
+    distinct = len({tr.w_eff[r].tobytes() for r in range(tr.n_rounds)})
+    assert distinct >= 2
+
+
+# ---------------------------------------------------------------------------
+# RA driver-vs-scan training parity (same acceptance style as test_batch)
+# ---------------------------------------------------------------------------
+
+def test_ra_scan_path_matches_driver():
+    """Train-on-trace on an RA scenario reproduces the per-round driver to
+    <= 1e-5 — random per-round W pinned through ``embed_w``."""
+    from repro.sim import simulate_dpsgd_cnn, train_cnn_on_traces
+
+    cfg = get_scenario("ra_fading", compute_s_per_round=0.05,
+                       eval_every_rounds=2)
+    trace, _ = simulate_dpsgd_cnn(cfg, epochs=1, n_train=600, n_test=150)
+    traces, scan = train_cnn_on_traces([cfg], epochs=1, n_train=600,
+                                       n_test=150)
+    drv = np.array([r.loss for r in trace.records])
+    assert np.abs(scan["losses"][0] - drv).max() <= 1e-5
+    drv_acc = [(r.t_end_s, r.acc) for r in trace.records if r.acc is not None]
+    assert len(drv_acc) == len(scan["curves"][0])
+    for (t_d, a_d), (t_s, a_s) in zip(drv_acc, scan["curves"][0]):
+        assert abs(a_s - a_d) <= 1e-6
+        assert abs(t_s - t_d) <= 1e-9 * (1.0 + t_d)
+    # the traces really exercised per-round-random W
+    lams = [r.lam_effective for r in trace.records]
+    assert len(set(lams)) >= 2

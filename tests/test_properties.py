@@ -113,6 +113,64 @@ def test_comm_time_additive_in_nodes(n):
 
 
 @SET
+@given(st.integers(1, 5000), st.integers(0, 100), st.floats(0.1, 50.0))
+def test_blockwise_int8_roundtrip_error_bounded(n, seed, amp):
+    """core.compression per-block int8: round-trip error <= scale/2 per
+    element of each 2048-block, arbitrary (non-multiple) lengths included;
+    all-zero blocks are exact."""
+    import jax, jax.numpy as jnp
+    from repro.core.compression import _BLOCK, dequantize_int8, quantize_int8
+    x = jax.random.normal(jax.random.key(seed), (n,)) * amp
+    if n > 3:  # plant an exact-zero run crossing the first block boundary
+        x = x.at[: min(n, _BLOCK) // 2].set(0.0)
+    q, scale, n_out = quantize_int8(x)
+    assert n_out == n
+    deq = np.asarray(dequantize_int8(q, scale, n))
+    per_elem_scale = np.repeat(np.asarray(scale), _BLOCK)[:n]
+    # scale/2 from rounding + f32 slack proportional to the amplitude
+    assert np.all(np.abs(deq - np.asarray(x))
+                  <= per_elem_scale * 0.5 + 1e-5 * amp)
+    zero = np.asarray(x) == 0.0
+    assert (deq[zero] == 0.0).all()
+
+
+@SET
+@given(st.integers(2, 4), st.integers(1, 3), st.floats(-20.0, 20.0),
+       st.integers(16, 256))
+def test_error_feedback_mix_preserves_constants(logn, k, c, dim):
+    """Error-feedback compressed gossip keeps the mixing row-stochastic: a
+    node-constant state is a fixed point (up to one quantization step), so
+    compression cannot leak mass out of the average."""
+    import jax.numpy as jnp
+    from repro.configs.base import RunConfig
+    from repro.train.step import mix_params
+    n = 2 ** logn
+    k = min(k, max(1, n // 2 - 1)) or 1
+    plan = gossip.ring_plan(("d",), (n,), k)
+    x = jnp.full((n, dim), c, dtype=jnp.float32)
+    mixed, new_res = mix_params({"w": x}, {"w": jnp.zeros_like(x)}, plan,
+                                RunConfig(compression="int8"))
+    np.testing.assert_allclose(np.asarray(mixed["w"]), c,
+                               rtol=1e-5, atol=1e-6)
+    assert float(jnp.abs(new_res["w"]).max()) <= abs(c) / 127.0 + 1e-6
+
+
+@SET
+@given(placements(n_min=4, n_max=6), st.floats(0.1, 0.95))
+def test_access_solver_batched_matches_reference(cap, lam_t):
+    """The RA (p, R) sweep is pinned to its sequential reference exactly,
+    like every other batched solver in the repo."""
+    from repro.core import access_opt
+    a = access_opt.solve_access(cap, 698880.0, lam_t)
+    b = access_opt.solve_access_reference(cap, 698880.0, lam_t)
+    np.testing.assert_array_equal(a.p, b.p)
+    np.testing.assert_array_equal(a.rates_bps, b.rates_bps)
+    assert (a.t_round_s, a.lam, a.feasible) == (b.t_round_s, b.lam, b.feasible)
+    if a.feasible:
+        assert a.lam <= lam_t + 1e-9
+
+
+@SET
 @given(placements(), st.floats(1e5, 1e8), st.integers(0, 1000))
 def test_batched_lambda_and_time_bitwise_match_scalar(cap, rate, seed):
     """The vectorized wireless plane is pinned to the scalar one exactly:
