@@ -16,6 +16,11 @@ Measures (median + min over several runs each):
   trained through both MAC planes in one ``train_cnn_on_traces`` call,
   emitting the accuracy-vs-**simulated-wall-clock** traces (the axis the
   paper's runtime claim lives on) plus each plane's communication time.
+* ``compression_compare`` — fp32 vs bf16 vs int8+error-feedback payloads on
+  the dense ``fading`` world: per-mode exact wire bits, simulated
+  communication time (the airtime drop tracks the exact ``payload_bits``
+  ratio, ~3.9x for int8), and the accuracy-vs-simulated-time curves of the
+  quantized train-on-trace path.
 
 Cross-checks (``checks`` in the JSON, process exits 1 on any failure):
 
@@ -23,9 +28,13 @@ Cross-checks (``checks`` in the JSON, process exits 1 on any failure):
   ``t_com_s``, ``lam``) over random placements and lambda targets;
 * ``access_opt.solve_access`` (batched (p, R) sweep) == its pinned
   sequential reference, same placements/targets;
+* the joint rate x payload planners (``rate_opt.solve_joint``,
+  ``access_opt.solve_access_joint``) == their sequential references,
+  including the picked mode and exact wire bits;
 * a fast-MAC and a reference-MAC simulator run of the same scenario produce
   identical round durations / retx / outage / delivered fractions;
-* the static scenario still reproduces Eq. 3 to 1e-9 relative.
+* the static scenario still reproduces Eq. 3 to 1e-9 relative — and its
+  int8 variant reproduces Eq. 3 *at the compressed wire bits* to 1e-9.
 
 Prints the JSON to stdout; full runs also write it to ``--out`` (default
 ``BENCH_sim.json`` at the repo root) so every PR leaves a perf trajectory.
@@ -226,6 +235,90 @@ def bench_mac_compare(quick: bool) -> dict:
     return result
 
 
+def bench_compression_compare(quick: bool) -> dict:
+    """fp32 vs bf16 vs int8+EF payloads on the dense fading world: wire
+    bits, simulated communication time, and the quantized train-on-trace
+    accuracy curves (one ``train_cnn_on_traces`` call per mode — the scan
+    executable bakes the quantization mode in)."""
+    import time as _time
+
+    from repro.sim import train_cnn_on_traces
+
+    n_train = 300 if quick else 1200
+    cfgs = {
+        "fp32": get_scenario("fading", eval_every_rounds=2),
+        "bf16": get_scenario("compressed_bf16", eval_every_rounds=2),
+        "int8_ef": get_scenario("compressed_int8", eval_every_rounds=2),
+    }
+    t0 = _time.perf_counter()
+    result: dict = {"modes": {}}
+    base_comm = None
+    for label, cfg in cfgs.items():
+        traces, out = train_cnn_on_traces([cfg], epochs=1, n_train=n_train,
+                                          n_test=150)
+        s = traces.traces[0].trace.summary()
+        if base_comm is None:
+            base_comm = s["total_comm_s"]
+        result["modes"][label] = {
+            "scenario": cfg.name,
+            "payload_mode": cfg.payload.mode,
+            "wire_bits": cfg.wire_bits(),
+            "wire_ratio": cfg.model_bits / cfg.wire_bits(),
+            "comm_s": s["total_comm_s"],
+            "airtime_speedup": base_comm / s["total_comm_s"],
+            "outage_rate": s["outage_rate"],
+            "final_acc": float(out["acc"][0, -1]),
+            "curve": [[float(t), float(a)] for t, a in out["curves"][0]],
+        }
+    result["t_wall_s"] = _time.perf_counter() - t0
+    return result
+
+
+def check_compression(quick: bool) -> dict:
+    """Joint rate x payload planners vs their pinned sequential references
+    — identical picked mode, wire bits, rates, times — plus the Eq. 3
+    wire-bit anchor: the static scenario under an int8 payload reproduces
+    ``tdm_time_s(payload_bits, rates) * rounds`` to 1e-9 relative."""
+    from repro.core import access_opt, rate_opt
+    from repro.sim import QuantConfig
+
+    ok_joint = True
+    ok_access = True
+    seeds = range(2) if quick else range(5)
+    for seed in seeds:
+        n = 4 + seed % 3
+        pos = channel.random_placement(n, 200.0, seed=seed)
+        cap = channel.capacity_matrix(
+            pos, channel.ChannelParams(path_loss_exp=3.5 + 0.5 * seed))
+        for lam_t in (0.3, 0.7, -1.0):
+            a = rate_opt.solve_joint(cap, M_BITS, lam_t)
+            b = rate_opt.solve_joint_reference(cap, M_BITS, lam_t)
+            ok_joint &= (a.mode == b.mode and a.wire_bits == b.wire_bits
+                         and np.array_equal(a.rates_bps, b.rates_bps)
+                         and a.t_com_s == b.t_com_s and a.lam == b.lam)
+            c = access_opt.solve_access_joint(cap, M_BITS, lam_t)
+            d = access_opt.solve_access_joint_reference(cap, M_BITS, lam_t)
+            ok_access &= (c.mode == d.mode and c.wire_bits == d.wire_bits
+                          and np.array_equal(c.p, d.p)
+                          and np.array_equal(c.rates_bps, d.rates_bps)
+                          and c.t_round_s == d.t_round_s and c.lam == d.lam)
+
+    cfg = get_scenario("static", lambda_target=0.3,
+                       payload=QuantConfig(mode="int8"))
+    cap = channel.capacity_matrix(
+        channel.random_placement(6, 200.0, seed=0),
+        channel.ChannelParams(path_loss_exp=5.0))
+    sol = rate_opt.solve(cap, cfg.wire_bits(), 0.3)
+    trace = WirelessSimulator(cfg).run(10)
+    rel = abs(trace.total_comm_s - sol.t_com_s * 10) / (sol.t_com_s * 10)
+    return {
+        "solve_joint": bool(ok_joint),
+        "solve_access_joint": bool(ok_access),
+        "eq3_wire_anchor_rel_err": rel,
+        "eq3_wire_anchor": bool(rel < 1e-9),
+    }
+
+
 def bench_sweep(quick: bool) -> dict:
     seeds = range(2) if quick else range(5)
     configs = [get_scenario(name, seed=s, solver="greedy")
@@ -260,9 +353,11 @@ def main(argv=None) -> int:
         "sim": bench_sim(reps, rounds),
         "sweep": bench_sweep(args.quick),
         "mac_compare": bench_mac_compare(args.quick),
+        "compression_compare": bench_compression_compare(args.quick),
         "checks": {
             "solver": check_solvers(args.quick),
             "access": check_access(args.quick),
+            "compression": check_compression(args.quick),
             "mac": check_mac(4 if args.quick else 8),
         },
     }
@@ -270,6 +365,8 @@ def main(argv=None) -> int:
     failed = (not result["solver"]["match"]
               or not all(checks["solver"].values())
               or not all(checks["access"].values())
+              or not all(v for k, v in checks["compression"].items()
+                         if isinstance(v, bool))
               or not all(v for k, v in checks["mac"].items()
                          if isinstance(v, bool)))
     result["ok"] = not failed

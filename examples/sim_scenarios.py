@@ -26,12 +26,22 @@ Three demos, all on the paper's setup (n=6 nodes, 200 m square, the
 
 ``--scenario PATTERN`` restricts the ``--compare`` table to scenarios whose
 name matches the glob (e.g. ``--scenario 'ra_*'`` for the random-access
-family).
+family). ``--payload MODE`` overrides the gossip payload compression of
+every scenario the chosen demo touches (``none``/``bf16``/``int8``, or
+``auto`` to let the joint rate x payload planner pick per replan —
+comm-only, so the ``--compare``/``--margin-sweep`` tables but not the
+training demos); Eq. 3 / the RA slot clock then charge
+the exact compressed wire bits, and the ``--compare`` table grows a
+``payload`` + ``Mb/bcast`` column pair showing what one broadcast puts on
+the air.
 
 Usage:
     PYTHONPATH=src python -m examples.sim_scenarios
     PYTHONPATH=src python -m examples.sim_scenarios --scenario 'ra_*'
+    PYTHONPATH=src python -m examples.sim_scenarios --payload int8
+    PYTHONPATH=src python -m examples.sim_scenarios --payload auto
     PYTHONPATH=src python -m examples.sim_scenarios --train fading
+    PYTHONPATH=src python -m examples.sim_scenarios --train compressed_int8
     PYTHONPATH=src python -m examples.sim_scenarios --margin-sweep
     PYTHONPATH=src python -m examples.sim_scenarios --train-sweep fading --seeds 4
     PYTHONPATH=src python -m examples.sim_scenarios --mac-compare
@@ -41,33 +51,49 @@ from __future__ import annotations
 import argparse
 import fnmatch
 
-from repro.sim import (WirelessSimulator, get_scenario, list_scenarios,
-                       simulate_dpsgd_cnn, train_cnn_on_traces)
+from repro.sim import (QuantConfig, WirelessSimulator, get_scenario,
+                       list_scenarios, simulate_dpsgd_cnn,
+                       train_cnn_on_traces)
 
 
-def compare(rounds: int, solver: str, pattern: str = "*") -> None:
+def _fetch(name: str, payload: str | None, **overrides):
+    """``get_scenario`` + the optional ``--payload`` override, with the
+    registry's error-feedback convention: EF on for int8 only (bf16 rounding
+    is benign enough to skip the residual state — ``compressed_bf16`` ships
+    EF off, and the override must train the same algorithm)."""
+    if payload is not None:
+        overrides["payload"] = QuantConfig(mode=payload,
+                                           error_feedback=payload == "int8")
+    return get_scenario(name, **overrides)
+
+
+def compare(rounds: int, solver: str, pattern: str = "*",
+            payload: str | None = None) -> None:
     names = [n for n in list_scenarios() if fnmatch.fnmatch(n, pattern)]
     if not names:
         raise SystemExit(f"no registered scenario matches {pattern!r}")
-    print(f"{'scenario':>10} {'mac':>6} {'comm_s':>9} {'outage':>7} "
+    print(f"{'scenario':>15} {'mac':>6} {'payload':>7} {'Mb/bcast':>8} "
+          f"{'comm_s':>9} {'outage':>7} "
           f"{'retx':>6} {'replans':>7} {'fails':>5} {'n_end':>5}")
     for name in names:
-        cfg = get_scenario(name, solver=solver)
+        cfg = _fetch(name, payload, solver=solver)
         trace = WirelessSimulator(cfg).run(rounds)
         s = trace.summary()
         mac = "ra" if cfg.mac_kind == "random_access" else "tdm"
-        print(f"{name:>10} {mac:>6} {s['total_comm_s']:>9.2f} "
+        last = trace.records[-1]
+        print(f"{name:>15} {mac:>6} {last.payload_mode:>7} "
+              f"{last.wire_bits / 1e6:>8.3f} {s['total_comm_s']:>9.2f} "
               f"{s['outage_rate']:>7.2%} "
               f"{s['retx_packets']:>6d} {s['replans']:>7d} "
               f"{s['failures']:>5d} {s['final_n_live']:>5d}")
 
 
-def mac_compare(epochs: int) -> None:
+def mac_compare(epochs: int, payload: str | None = None) -> None:
     """Same placement, same CNN, two MACs: accuracy vs each plane's own
     simulated wall-clock — what collision-free scheduling is worth."""
-    cfgs = [get_scenario("static", eval_every_rounds=2),
-            get_scenario("ra_static", eval_every_rounds=2),
-            get_scenario("ra_capture", eval_every_rounds=2)]
+    cfgs = [_fetch("static", payload, eval_every_rounds=2),
+            _fetch("ra_static", payload, eval_every_rounds=2),
+            _fetch("ra_capture", payload, eval_every_rounds=2)]
     traces, out = train_cnn_on_traces(cfgs, epochs=epochs, n_train=600,
                                       n_test=150)
     print("scenario,mac,t_sim_s,accuracy")
@@ -81,8 +107,9 @@ def mac_compare(epochs: int) -> None:
               f"final acc {out['acc'][k, -1]:.4f}")
 
 
-def train(name: str, epochs: int, solver: str) -> None:
-    cfg = get_scenario(name, solver=solver, eval_every_rounds=2)
+def train(name: str, epochs: int, solver: str,
+          payload: str | None = None) -> None:
+    cfg = _fetch(name, payload, solver=solver, eval_every_rounds=2)
     trace, _ = simulate_dpsgd_cnn(cfg, epochs=epochs, n_train=1200,
                                   n_test=300, measure_compute=True)
     s = trace.summary()
@@ -95,11 +122,12 @@ def train(name: str, epochs: int, solver: str) -> None:
         print(f"{t:.2f},{acc:.4f}")
 
 
-def train_sweep(name: str, seeds: int, epochs: int, solver: str) -> None:
+def train_sweep(name: str, seeds: int, epochs: int, solver: str,
+                payload: str | None = None) -> None:
     """Monte-Carlo accuracy-vs-simulated-time family from one compiled call."""
     import time
 
-    cfgs = [get_scenario(name, seed=s, solver=solver, eval_every_rounds=2)
+    cfgs = [_fetch(name, payload, seed=s, solver=solver, eval_every_rounds=2)
             for s in range(seeds)]
     t0 = time.perf_counter()
     traces, out = train_cnn_on_traces(cfgs, epochs=epochs, n_train=600,
@@ -116,10 +144,11 @@ def train_sweep(name: str, seeds: int, epochs: int, solver: str) -> None:
           f"min {final.min():.4f} max {final.max():.4f}")
 
 
-def margin_sweep(rounds: int, solver: str) -> None:
+def margin_sweep(rounds: int, solver: str, payload: str | None = None) -> None:
     print("fading_margin_bps,feasible,outage_rate,retx_packets,comm_s")
     for margin in (0.0, 5e5, 1e6, 2e6, 3e6, 4e6):
-        cfg = get_scenario("fading", fading_margin_bps=margin, solver=solver)
+        cfg = _fetch("fading", payload, fading_margin_bps=margin,
+                     solver=solver)
         sim = WirelessSimulator(cfg)
         trace = sim.run(rounds)
         s = trace.summary()
@@ -142,6 +171,11 @@ def main(argv: list[str] | None = None) -> None:
                       help="TDM vs random-access accuracy-vs-sim-time")
     p.add_argument("--scenario", default="*", metavar="PATTERN",
                    help="glob filter for --compare (e.g. 'ra_*')")
+    p.add_argument("--payload", default=None,
+                   choices=["none", "bf16", "int8", "auto"],
+                   help="override gossip payload compression ('auto' lets "
+                        "the joint planner pick; comm-only demos — the "
+                        "training demos need a concrete mode)")
     p.add_argument("--rounds", type=int, default=20)
     p.add_argument("--epochs", type=int, default=2)
     p.add_argument("--seeds", type=int, default=4,
@@ -149,16 +183,23 @@ def main(argv: list[str] | None = None) -> None:
     p.add_argument("--solver", default="greedy",
                    help="rate_opt method for (re)plans; 'auto' = exact")
     args = p.parse_args(argv)
+    if args.payload == "auto" and (args.train or args.train_sweep
+                                   or args.mac_compare):
+        # reject before the trace precompute burns minutes: training needs
+        # the concrete mode the plan picked, not the planner's choice knob
+        p.error("--payload auto is comm-only (--compare / --margin-sweep); "
+                "pick none/bf16/int8 for the training demos")
     if args.train:
-        train(args.train, args.epochs, args.solver)
+        train(args.train, args.epochs, args.solver, args.payload)
     elif args.train_sweep:
-        train_sweep(args.train_sweep, args.seeds, args.epochs, args.solver)
+        train_sweep(args.train_sweep, args.seeds, args.epochs, args.solver,
+                    args.payload)
     elif args.margin_sweep:
-        margin_sweep(args.rounds, args.solver)
+        margin_sweep(args.rounds, args.solver, args.payload)
     elif args.mac_compare:
-        mac_compare(args.epochs)
+        mac_compare(args.epochs, args.payload)
     else:
-        compare(args.rounds, args.solver, args.scenario)
+        compare(args.rounds, args.solver, args.scenario, args.payload)
 
 
 if __name__ == "__main__":

@@ -57,8 +57,9 @@ from .comm_model import tdm_time_s
 from .topology import (adjacency_from_rates, adjacency_from_rates_batch,
                        paper_w, spectral_lambda, spectral_lambda_batch)
 
-__all__ = ["AccessSolution", "default_p_grid", "expected_round_s",
-           "solve_access", "solve_access_reference"]
+__all__ = ["AccessSolution", "JointAccessSolution", "default_p_grid",
+           "expected_round_s", "solve_access", "solve_access_reference",
+           "solve_access_joint", "solve_access_joint_reference"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +78,21 @@ class AccessSolution:
 
     def __repr__(self) -> str:  # keep test logs readable
         return (f"AccessSolution(p={self.p[0]:.3f}, "
+                f"t_round={self.t_round_s:.4g}s, lam={self.lam:.4f}, "
+                f"feasible={self.feasible})")
+
+
+@dataclasses.dataclass(frozen=True)
+class JointAccessSolution(AccessSolution):
+    """An ``AccessSolution`` scored at the wire bits of a chosen payload
+    mode: slots shrink to ``wire_bits / min R`` seconds, the coupon-collector
+    expectation is unchanged (contention does not see the payload)."""
+
+    mode: str = "none"
+    wire_bits: float = 0.0
+
+    def __repr__(self) -> str:
+        return (f"JointAccessSolution(mode={self.mode!r}, p={self.p[0]:.3f}, "
                 f"t_round={self.t_round_s:.4g}s, lam={self.lam:.4f}, "
                 f"feasible={self.feasible})")
 
@@ -272,3 +288,68 @@ def solve_access_reference(
         if densest is None or lam < densest.lam:
             densest = sol()
     return best if best is not None else densest
+
+
+# ---------------------------------------------------------------------------
+# Joint (rate x payload-mode) planning — the RA analogue of
+# ``rate_opt.solve_joint``
+# ---------------------------------------------------------------------------
+
+def _joint(sol: AccessSolution, mode: str,
+           wire_bits: float) -> JointAccessSolution:
+    return JointAccessSolution(sol.p, sol.rates_bps, sol.slot_s,
+                               sol.exp_slots, sol.t_round_s, sol.t_tdm_s,
+                               sol.lam, sol.w, sol.feasible,
+                               mode=mode, wire_bits=wire_bits)
+
+
+def solve_access_joint(
+    capacity: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    bandwidth_hz: float = 20e6,
+    interference_min_snr: float = 1e-2,
+    p_grid: np.ndarray | None = None,
+    modes: tuple[str, ...] | None = None,
+    _solver=None,
+) -> JointAccessSolution:
+    """Sweep the payload-mode axis on top of the batched (p, R) sweep: each
+    mode's candidates are scored at its exact wire bits
+    (``rate_opt.payload_wire_bits`` — a slot carries the *compressed* model,
+    so ``slot_s = wire_bits / min R``), the density constraint stays in R.
+    Feasible beats infeasible, then strictly smaller expected round time,
+    ties to the earlier entry of ``modes`` (default: every
+    ``compression.PAYLOAD_MODES`` entry) — pinned bit-identical to
+    ``solve_access_joint_reference``."""
+    from .compression import PAYLOAD_MODES
+    from .rate_opt import payload_wire_bits
+
+    solver = solve_access if _solver is None else _solver
+    best: JointAccessSolution | None = None
+    for mode in (PAYLOAD_MODES if modes is None else modes):
+        wb = payload_wire_bits(model_bits, mode)
+        cand = _joint(solver(capacity, wb, lambda_target,
+                             bandwidth_hz=bandwidth_hz,
+                             interference_min_snr=interference_min_snr,
+                             p_grid=p_grid), mode, wb)
+        if best is None or (cand.feasible, -cand.t_round_s) > \
+                (best.feasible, -best.t_round_s):
+            best = cand
+    return best
+
+
+def solve_access_joint_reference(
+    capacity: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    bandwidth_hz: float = 20e6,
+    interference_min_snr: float = 1e-2,
+    p_grid: np.ndarray | None = None,
+    modes: tuple[str, ...] | None = None,
+) -> JointAccessSolution:
+    """``solve_access_joint`` over the pinned sequential (p, R) sweep."""
+    return solve_access_joint(capacity, model_bits, lambda_target,
+                              bandwidth_hz=bandwidth_hz,
+                              interference_min_snr=interference_min_snr,
+                              p_grid=p_grid, modes=modes,
+                              _solver=solve_access_reference)

@@ -4,6 +4,13 @@ Wireless (paper): TDM sequential broadcasts, one per node per iteration:
 
     t_com = M * sum_i 1/R_i   [sec/share]          (Eq. 3)
 
+M is the **wire** size of one broadcast — with payload compression on
+(``core.compression``), callers must charge the exact compressed bits
+(``compression.payload_bits`` / ``rate_opt.payload_wire_bits``: int8 lanes
++ per-block fp32 scales, block padding included), not the raw fp32
+``model_bits``. The simulator, both MAC planes, and the joint
+rate x payload planners all pass wire bits here.
+
 Pod mode: gossip rounds over mesh links. One ppermute round of ``bytes_per_rank``
 on an ICI ring costs ``bytes / link_bw``; edges crossing the pod boundary are
 scaled by ``dci_penalty`` (the datacenter analogue of a large path-loss

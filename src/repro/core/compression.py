@@ -26,11 +26,14 @@ from .gossip import GossipPlan
 
 PyTree = Any
 
-__all__ = ["QuantConfig", "quantize_int8", "dequantize_int8",
+__all__ = ["QuantConfig", "PAYLOAD_MODES", "quantize_int8", "dequantize_int8",
+           "quantize_int8_rows", "dequantize_int8_rows",
            "compressed_gossip_mix_array", "compressed_gossip_mix_buffers",
-           "compression_ratio"]
+           "payload_bits", "compression_ratio"]
 
 _BLOCK = 2048  # quantization block (per-block scales bound the error)
+
+PAYLOAD_MODES = ("none", "bf16", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,28 +42,70 @@ class QuantConfig:
     error_feedback: bool = True
 
 
-def _pad_to_block(x: jax.Array) -> tuple[jax.Array, int]:
-    n = x.shape[0]
-    pad = (-n) % _BLOCK
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
-    return x, n
-
-
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array, int]:
-    """1-D fp -> (int8 payload, per-block fp32 scales, original length)."""
-    xp, n = _pad_to_block(x.astype(jnp.float32))
-    blocks = xp.reshape(-1, _BLOCK)
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
-    scale = jnp.where(scale == 0, 1.0, scale)
-    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
-    return q.reshape(-1), scale.reshape(-1), n
+    """1-D fp -> (int8 payload, per-block fp32 scales, original length).
+    The single-row case of ``quantize_int8_rows`` — one implementation of
+    the wire format, so the comm-plane accounting and the training path
+    cannot drift apart."""
+    n = x.shape[0]
+    q, scale = quantize_int8_rows(x[None])
+    return q[0], scale[0], n
+
+
+def _check_payload_shapes(q_lanes: int, n_scales: int, n: int) -> None:
+    """Shape contract shared by the 1-D and rowwise dequantizers: the int8
+    payload is whole blocks, one scale per block, and the claimed original
+    length fits inside the padded payload. A hard ``reshape(-1, _BLOCK)``
+    would crash (or silently misalign) on any of these instead."""
+    if q_lanes % _BLOCK:
+        raise ValueError(
+            f"int8 payload of {q_lanes} lanes is not whole {_BLOCK}-lane "
+            "blocks — was it produced by quantize_int8?")
+    blocks = q_lanes // _BLOCK
+    if n_scales != blocks:
+        raise ValueError(
+            f"scale count {n_scales} disagrees with the payload's "
+            f"{blocks} blocks ({q_lanes} lanes / {_BLOCK})")
+    if not 0 <= n <= q_lanes:
+        raise ValueError(
+            f"original length n={n} does not fit the {q_lanes}-lane payload")
 
 
 def dequantize_int8(q: jax.Array, scale: jax.Array, n: int,
                     dtype=jnp.float32) -> jax.Array:
-    blocks = q.reshape(-1, _BLOCK).astype(jnp.float32) * scale.reshape(-1, 1)
-    return blocks.reshape(-1)[:n].astype(dtype)
+    """Inverse of ``quantize_int8`` (the single-row case of
+    ``dequantize_int8_rows``); validates the payload/scale shape contract."""
+    return dequantize_int8_rows(q[None], scale[None], n, dtype)[0]
+
+
+def quantize_int8_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Row-batched ``quantize_int8``: (R, L) fp -> (int8 (R, Lp), fp32 scales
+    (R, Lp/_BLOCK)) with Lp = L padded to whole blocks. Row r equals
+    ``quantize_int8(x[r])`` — each node's gossip message quantizes
+    independently, which is what the masked train-on-trace step batches."""
+    x = jnp.atleast_2d(x).astype(jnp.float32)
+    r, l = x.shape
+    pad = (-l) % _BLOCK
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((r, pad), x.dtype)], axis=1)
+    blocks = x.reshape(r, -1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(r, -1), scale.reshape(r, -1)
+
+
+def dequantize_int8_rows(q: jax.Array, scale: jax.Array, l: int,
+                         dtype=jnp.float32) -> jax.Array:
+    """Inverse of ``quantize_int8_rows``: trims each row back to length
+    ``l``. Validates the same payload/scale shape contract per row."""
+    r = q.shape[0]
+    _check_payload_shapes(q.shape[1], scale.shape[1], l)
+    if scale.shape[0] != r:
+        raise ValueError(
+            f"payload has {r} rows but scales have {scale.shape[0]}")
+    blocks = q.reshape(r, -1, _BLOCK).astype(jnp.float32) * scale[..., None]
+    return blocks.reshape(r, -1)[:, :l].astype(dtype)
 
 
 def compressed_gossip_mix_array(
@@ -120,12 +165,41 @@ def compressed_gossip_mix_buffers(
     return out, res
 
 
-def compression_ratio(cfg: QuantConfig, base_dtype_bytes: int = 4) -> float:
-    """Payload-bytes multiplier vs the uncompressed buffer (scales included)."""
+def payload_bits(n: int, cfg: QuantConfig, base_dtype_bits: int = 32) -> float:
+    """**Exact** wire bits of an ``n``-element buffer under ``cfg`` — what
+    actually crosses the air, and therefore what Eq. 3 must charge:
+
+    * ``none`` — ``n`` lanes of the base dtype, verbatim;
+    * ``bf16`` — ``n`` 16-bit lanes;
+    * ``int8`` — ``ceil(n / _BLOCK)`` **whole** blocks of ``_BLOCK`` int8
+      lanes (the tail block is padded on the wire, not truncated) plus one
+      fp32 scale per block — including the scale of a partial tail block.
+
+    The asymptotic ratio ignores both pad effects; at n=1 the real int8
+    payload is a full 2048-byte block + one scale, 513x the naive n bytes.
+    """
+    n = int(n)
+    if n < 0:
+        raise ValueError(f"buffer length must be >= 0, got {n}")
+    if n == 0:
+        return 0.0
     if cfg.mode == "none":
-        return 1.0
+        return float(n * base_dtype_bits)
     if cfg.mode == "bf16":
-        return 2.0 / base_dtype_bytes
+        return float(n * 16)
     if cfg.mode == "int8":
-        return (1.0 + 4.0 / _BLOCK) / base_dtype_bytes
-    raise ValueError(cfg.mode)
+        blocks = -(-n // _BLOCK)                      # ceil
+        return float(blocks * (_BLOCK * 8 + 32))      # int8 lanes + f32 scale
+    raise ValueError(f"unknown compression mode {cfg.mode!r}")
+
+
+def compression_ratio(cfg: QuantConfig, n: int,
+                      base_dtype_bytes: int = 4) -> float:
+    """Exact payload-bits multiplier vs the uncompressed ``n``-element
+    buffer: ``payload_bits(n, cfg) / (n * base_dtype_bytes * 8)``. Block
+    padding and per-block scales included — the previous asymptotic formula
+    understated the wire bytes for every n not a multiple of ``_BLOCK``."""
+    if n <= 0:
+        raise ValueError(f"buffer length must be positive, got {n}")
+    return payload_bits(n, cfg, base_dtype_bits=base_dtype_bytes * 8) \
+        / (n * base_dtype_bytes * 8)

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["DPSGDConfig", "replicate", "mix", "dpsgd_step", "make_dpsgd_step",
-           "dpsgd_masked_step", "embed_w"]
+           "dpsgd_masked_step", "dpsgd_masked_compressed_step",
+           "make_dpsgd_compressed_step", "embed_w", "zero_residuals"]
 
 PyTree = Any
 
@@ -173,6 +174,127 @@ def dpsgd_masked_step(
     return new_params, losses
 
 
+def zero_residuals(node_params: PyTree) -> PyTree:
+    """Fresh error-feedback state: one fp32 zero per parameter (the residual
+    lives in fp32 no matter the parameter dtype, so quantization error
+    accumulates at full precision)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                        node_params)
+
+
+def _mix_compressed(
+    node_params: PyTree,
+    residuals: PyTree,
+    w: jax.Array,
+    live: jax.Array,
+    quant,
+) -> tuple[PyTree, PyTree]:
+    """Quantized error-feedback mixing on the masked layout.
+
+    Each node quantizes its **whole message once per round** — the leaves
+    are concatenated into one (n, total) buffer before quantization, so the
+    blockwise-int8 payload is exactly the ``compression.payload_bits`` of
+    the full model that Eq. 3 charges on the wire (quantizing per leaf would
+    pad every leaf to whole blocks and transmit more bits than the comm
+    plane accounts for). Per node:  m_i = Q(x_i + e_i),
+    e_i' = (x_i + e_i) - m_i;  receivers mix the **exact** own value with
+    dequantized neighbor messages,  x_j' = W_jj x_j + sum_{i!=j} W_ji m_i
+    (CHOCO-SGD-flavored, ref [6] of the paper). Under the ``embed_w``
+    contract dead rows come back verbatim (W_jj = 1, off-diagonal 0) and
+    dead columns weight 0, and dead residuals are zeroed so a node that dies
+    mid-trace cannot leak stale quantization error anywhere.
+    ``mode="none"`` degenerates to the exact ``mix`` (bit-identical to the
+    uncompressed step) with the residuals passed through untouched.
+    """
+    if quant.mode == "none":
+        return mix(node_params, w), residuals
+    from .compression import dequantize_int8_rows, quantize_int8_rows
+
+    leaves, treedef = jax.tree.flatten(node_params)
+    res_leaves = treedef.flatten_up_to(residuals)
+    n = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [p.reshape(n, -1).astype(jnp.float32) for p in leaves], axis=1)
+    res = jnp.concatenate([r.reshape(n, -1) for r in res_leaves], axis=1)
+    carried = flat + (res if quant.error_feedback else 0.0)
+    if quant.mode == "bf16":
+        deq = carried.astype(jnp.bfloat16).astype(jnp.float32)
+    elif quant.mode == "int8":
+        q, scale = quantize_int8_rows(carried)
+        deq = dequantize_int8_rows(q, scale, carried.shape[1])
+    else:
+        raise ValueError(f"unknown compression mode {quant.mode!r}")
+    new_res = carried - deq if quant.error_feedback else res
+    new_res = jnp.where(live.reshape(n, 1), new_res,
+                        jnp.zeros((), new_res.dtype))
+    w32 = w.astype(jnp.float32)
+    diag = jnp.diagonal(w32)
+    off = w32 - jnp.diag(diag)
+    mixed = diag[:, None] * flat + off @ deq
+
+    out, res_out, offset = [], [], 0
+    for p in leaves:
+        size = int(np.prod(p.shape[1:], dtype=np.int64))
+        out.append(mixed[:, offset:offset + size]
+                   .reshape(p.shape).astype(p.dtype))
+        res_out.append(new_res[:, offset:offset + size].reshape(p.shape))
+        offset += size
+    return (jax.tree.unflatten(treedef, out),
+            jax.tree.unflatten(treedef, res_out))
+
+
+def dpsgd_masked_compressed_step(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    node_params: PyTree,
+    node_batches: PyTree,
+    w: jax.Array,
+    live: jax.Array,
+    residuals: PyTree,
+    quant,
+    config: DPSGDConfig = DPSGDConfig(),
+) -> tuple[PyTree, PyTree, jax.Array]:
+    """``dpsgd_masked_step`` with quantized error-feedback mixing.
+
+    ``quant`` is a ``compression.QuantConfig``; every sender quantizes its
+    whole message once per round (one blockwise-int8 buffer — or bf16 cast —
+    over the concatenated leaves, so the payload is exactly the wire bits
+    Eq. 3 charges), the self term stays exact, and per-node residuals ride
+    along as explicit state — pass ``zero_residuals(node_params)`` at round 0 and
+    thread the returned residuals through (the train-on-trace scan carries
+    them). Dead nodes (``live`` False) keep their parameters verbatim and
+    their residuals zeroed, so churn composes with error feedback. With
+    ``quant.mode == "none"`` this is exactly ``dpsgd_masked_step`` plus an
+    untouched residual pass-through.
+
+    Returns ``(new_params, new_residuals, losses)``. ``quant`` has no
+    default on purpose: ``QuantConfig()``'s own default mode is the lossy
+    ``"int8"``, so an implicit fallback would silently quantize callers who
+    expected the exact baseline.
+    """
+    if config.local_steps != 1:
+        raise NotImplementedError(
+            "dpsgd_masked_compressed_step supports local_steps == 1 only")
+    losses, grads = _node_grads(loss_fn, node_params, node_batches)
+
+    def _mask(g: jax.Array) -> jax.Array:
+        m = live.reshape(live.shape[0], *([1] * (g.ndim - 1)))
+        return jnp.where(m, g, jnp.zeros((), dtype=g.dtype))
+
+    grads = jax.tree.map(_mask, grads)
+    if config.mix_first:
+        mixed, new_res = _mix_compressed(node_params, residuals, w, live,
+                                         quant)
+        new_params = jax.tree.map(
+            lambda xm, g: xm - config.eta * g.astype(xm.dtype), mixed, grads)
+    else:
+        stepped = jax.tree.map(
+            lambda x, g: x - config.eta * g.astype(x.dtype),
+            node_params, grads)
+        new_params, new_res = _mix_compressed(stepped, residuals, w, live,
+                                              quant)
+    return new_params, new_res, losses
+
+
 def make_dpsgd_step(
     loss_fn: Callable[[PyTree, PyTree], jax.Array],
     config: DPSGDConfig = DPSGDConfig(),
@@ -180,4 +302,21 @@ def make_dpsgd_step(
     """Bind loss_fn/config once; returns jitted (params, batches, W) -> step."""
     def step(node_params, node_batches, w):
         return dpsgd_step(loss_fn, node_params, node_batches, w, config)
+    return step
+
+
+def make_dpsgd_compressed_step(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    quant,
+    config: DPSGDConfig = DPSGDConfig(),
+):
+    """Bind (loss_fn, quant, config) once; returns one jitted
+    ``(params, batches, w, live, residuals) -> (params, residuals, losses)``
+    — the per-round-driver entry to ``dpsgd_masked_compressed_step`` (the
+    scan path calls the unjitted body inside its own jit)."""
+    @jax.jit
+    def step(node_params, node_batches, w, live, residuals):
+        return dpsgd_masked_compressed_step(
+            loss_fn, node_params, node_batches, w, live, residuals, quant,
+            config)
     return step

@@ -41,8 +41,10 @@ from .comm_model import tdm_time_batch_s, tdm_time_s
 from .topology import (adjacency_from_rates, adjacency_from_rates_batch,
                        paper_w, spectral_lambda, spectral_lambda_batch)
 
-__all__ = ["RateSolution", "solve_bruteforce", "solve_common_rate", "solve_k_nearest",
-           "solve_greedy", "solve", "candidate_rates",
+__all__ = ["RateSolution", "JointRateSolution", "solve_bruteforce",
+           "solve_common_rate", "solve_k_nearest",
+           "solve_greedy", "solve", "solve_joint", "solve_joint_reference",
+           "candidate_rates", "payload_wire_bits",
            "solve_bruteforce_reference", "solve_common_rate_reference",
            "solve_k_nearest_reference", "solve_greedy_reference",
            "evaluate_rates_batch", "clear_candidate_cache"]
@@ -59,6 +61,38 @@ class RateSolution:
     def __repr__(self) -> str:  # keep test logs readable
         return (f"RateSolution(t_com={self.t_com_s:.4g}s, lam={self.lam:.4f}, "
                 f"feasible={self.feasible}, rates={np.array2string(self.rates_bps, precision=3)})")
+
+
+@dataclasses.dataclass(frozen=True)
+class JointRateSolution(RateSolution):
+    """A ``RateSolution`` whose Eq. 3 time is charged at the **wire bits**
+    of a chosen payload mode (``t_com_s = wire_bits * sum_i 1/R_i``)."""
+
+    mode: str = "none"
+    wire_bits: float = 0.0
+
+    def __repr__(self) -> str:
+        return (f"JointRateSolution(mode={self.mode!r}, "
+                f"wire_bits={self.wire_bits:.4g}, "
+                f"t_com={self.t_com_s:.4g}s, lam={self.lam:.4f}, "
+                f"feasible={self.feasible})")
+
+
+def payload_wire_bits(model_bits: float, mode: str) -> float:
+    """Exact wire bits of an fp32 ``model_bits`` payload under ``mode`` —
+    ``compression.payload_bits`` on the model's fp32 lane count (tail lanes
+    rounded up; ``"none"`` passes ``model_bits`` through untouched so the
+    uncompressed Eq. 3 arithmetic stays bit-identical to the raw charge)."""
+    if mode == "none":
+        return float(model_bits)
+    from .compression import QuantConfig, payload_bits
+    n_elems = -(-int(np.ceil(model_bits)) // 32)        # fp32 lanes, ceil
+    return payload_bits(n_elems, QuantConfig(mode=mode))
+
+
+def _joint(sol: RateSolution, mode: str, wire_bits: float) -> JointRateSolution:
+    return JointRateSolution(sol.rates_bps, sol.t_com_s, sol.lam, sol.w,
+                             sol.feasible, mode=mode, wire_bits=wire_bits)
 
 
 def candidate_rates(capacity: np.ndarray, i: int) -> np.ndarray:
@@ -475,3 +509,65 @@ def solve(
         return min(pool, key=lambda s: s.t_com_s)
     return _SOLVERS[method](capacity, model_bits, lambda_target,
                             reception_based=reception_based)
+
+
+def _payload_modes() -> tuple[str, ...]:
+    from .compression import PAYLOAD_MODES
+    return PAYLOAD_MODES
+
+
+def solve_joint(
+    capacity: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    method: str = "auto",
+    modes: Optional[tuple[str, ...]] = None,
+    reception_based: bool = False,
+) -> JointRateSolution:
+    """Algorithm 2 over the joint (rate, payload-mode) candidate axis:
+
+        min_{R, mode}  wire_bits(mode) * sum_i 1/R_i
+        s.t.           lambda(W(R)) <= lambda_target
+
+    The density constraint lives entirely in R (Eq. 4's W never sees the
+    payload), so each mode's rate sweep reuses the batched
+    ``evaluate_rates_batch``/``spectral_lambda_batch`` machinery verbatim —
+    one ``solve`` per mode, Eq. 3 charged at that mode's **exact** wire bits
+    (``payload_wire_bits``: int8 bytes + per-block fp32 scales, padding
+    included). Feasible candidates beat infeasible ones; among equals the
+    strictly smaller ``t_com_s`` wins, ties to the earlier entry of
+    ``modes`` (default: every ``compression.PAYLOAD_MODES`` entry) — the
+    scan order ``solve_joint_reference`` pins.
+
+    Because feasibility is payload-blind and Eq. 3 is linear in the wire
+    size, today's mode axis always resolves to the cheapest-wire mode on
+    the mode-independent best rate row (int8 for any model over one block)
+    — the explicit per-mode sweep is kept anyway because it is what the
+    reference pin certifies, and because a future mode whose wire bits vary
+    with n or whose use constrains R (per-packet overheads, FEC) slots into
+    the same axis without touching the selection logic.
+    """
+    best: Optional[JointRateSolution] = None
+    for mode in (_payload_modes() if modes is None else modes):
+        wb = payload_wire_bits(model_bits, mode)
+        cand = _joint(solve(capacity, wb, lambda_target, method=method,
+                            reception_based=reception_based), mode, wb)
+        if best is None or (cand.feasible, -cand.t_com_s) > \
+                (best.feasible, -best.t_com_s):
+            best = cand
+    return best
+
+
+def solve_joint_reference(
+    capacity: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    method: str = "auto_reference",
+    modes: Optional[tuple[str, ...]] = None,
+    reception_based: bool = False,
+) -> JointRateSolution:
+    """``solve_joint`` over the pinned sequential solvers — the joint
+    planner's bit-identical oracle (same per-mode picks, same selection
+    arithmetic)."""
+    return solve_joint(capacity, model_bits, lambda_target, method=method,
+                       modes=modes, reception_based=reception_based)

@@ -17,8 +17,8 @@ from . import quantize as _qz
 from . import rglru_scan as _rg
 from . import rwkv6_scan as _rw
 
-__all__ = ["gossip_mix", "flash_attention_gqa", "rwkv6", "rglru",
-           "quantize_int8", "dequantize_int8"]
+__all__ = ["gossip_mix", "gossip_mix_q8", "flash_attention_gqa", "rwkv6",
+           "rglru", "quantize_int8", "dequantize_int8"]
 
 
 def gossip_mix(bufs: jax.Array, weights: jax.Array,
@@ -26,6 +26,18 @@ def gossip_mix(bufs: jax.Array, weights: jax.Array,
     """bufs (K, N) stacked self+neighbor payloads, weights (K,) -> (N,).
     ``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere."""
     return _gm.gossip_mix(bufs, weights, interpret=interpret)
+
+
+def gossip_mix_q8(self_buf: jax.Array, q_bufs: jax.Array, scales: jax.Array,
+                  weights: jax.Array,
+                  interpret: bool | None = None) -> jax.Array:
+    """Fused compressed-gossip receive: exact self buffer (N,) + K neighbor
+    payloads as blockwise int8 (K, Np) with per-2048-lane fp32 scales
+    (K, Np/2048) — the ``core.compression.quantize_int8`` wire layout —
+    weighted by (K+1,) ``weights`` (self first). Dequantizes on the VMEM
+    tile, accumulates fp32; returns fp32 (N,)."""
+    return _gm.gossip_mix_q8(self_buf, q_bufs, scales, weights,
+                             interpret=interpret)
 
 
 def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,

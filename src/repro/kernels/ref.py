@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gossip_mix_ref", "flash_attention_ref", "rwkv6_ref", "rglru_ref",
+__all__ = ["gossip_mix_ref", "gossip_mix_q8_ref", "flash_attention_ref",
+           "rwkv6_ref", "rglru_ref",
            "quantize_int8_ref", "dequantize_int8_ref"]
 
 
@@ -12,6 +13,22 @@ def gossip_mix_ref(bufs: jax.Array, weights: jax.Array) -> jax.Array:
     """bufs (K, N), weights (K,) -> (N,): out = sum_k w_k * bufs_k (fp32 acc)."""
     return jnp.einsum("k,kn->n", weights.astype(jnp.float32),
                       bufs.astype(jnp.float32)).astype(bufs.dtype)
+
+
+def gossip_mix_q8_ref(self_buf: jax.Array, q_bufs: jax.Array,
+                      scales: jax.Array, weights: jax.Array,
+                      block: int = 2048) -> jax.Array:
+    """Compressed-gossip receive oracle: exact self term + dequantized
+    neighbor payloads (blockwise int8, one fp32 scale per ``block`` lanes),
+    fp32 accumulate. ``weights`` (K+1,), self weight first; returns fp32
+    (N,) with N = ``self_buf.size``."""
+    n = self_buf.shape[0]
+    k, np8 = q_bufs.shape
+    deq = (q_bufs.astype(jnp.float32).reshape(k, np8 // block, block)
+           * scales.astype(jnp.float32)[..., None]).reshape(k, np8)[:, :n]
+    w = weights.astype(jnp.float32)
+    return w[0] * self_buf.astype(jnp.float32) + jnp.einsum("k,kn->n",
+                                                            w[1:], deq)
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -25,6 +25,7 @@ Modules:
 * ``batch``    — train-on-trace: jitted ``lax.scan`` training over
   precomputed traces, ``vmap`` over Monte-Carlo (seed, scenario) batches
 """
+from ..core.compression import QuantConfig
 from .batch import train_cnn_on_traces, train_on_trace, train_on_traces
 from .events import Event, EventKind, EventQueue, SimClock
 from .fading import FadingChannel, FadingParams
@@ -41,6 +42,7 @@ from .trace import (RoundContext, RoundRecord, SimTrace, TraceBatch,
                     sweep)
 
 __all__ = [
+    "QuantConfig",
     "Event", "EventKind", "EventQueue", "SimClock",
     "FadingChannel", "FadingParams",
     "MacParams", "RoundResult", "mean_drift", "tdm_round",

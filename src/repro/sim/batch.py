@@ -34,7 +34,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.dpsgd import DPSGDConfig, dpsgd_masked_step
+from ..core.compression import QuantConfig
+from ..core.dpsgd import (DPSGDConfig, dpsgd_masked_compressed_step,
+                          dpsgd_masked_step, zero_residuals)
 from .scenario import ScenarioConfig, get_scenario
 from .trace import (TraceBatch, TrainTrace, driver_batch_indices,
                     precompute_traces)
@@ -43,9 +45,12 @@ __all__ = ["train_on_trace", "train_on_traces", "train_cnn_on_traces"]
 
 PyTree = Any
 
+_NO_PAYLOAD = QuantConfig(mode="none")
+
 
 @partial(jax.jit,
-         static_argnames=("loss_fn", "config", "collect_node0", "unroll"))
+         static_argnames=("loss_fn", "config", "collect_node0", "unroll",
+                          "payload"))
 def train_on_trace(
     loss_fn: Callable[[PyTree, PyTree], Any],
     node_params: PyTree,
@@ -55,6 +60,7 @@ def train_on_trace(
     config: DPSGDConfig = DPSGDConfig(),
     collect_node0: bool = False,
     unroll: int | bool = True,
+    payload: QuantConfig = _NO_PAYLOAD,
 ):
     """Train over one precomputed trace in a single ``lax.scan``.
 
@@ -75,19 +81,43 @@ def train_on_trace(
     body unrolled, and Monte-Carlo sweeps re-enter this function with
     identical shapes, so the compile amortizes across the whole family.
     Pass ``unroll=1`` on accelerators or for very long traces.
+
+    ``payload`` selects the gossip compression of
+    ``core.dpsgd.dpsgd_masked_compressed_step``: with a quantized mode the
+    scan carries per-node error-feedback residuals (zero-initialized, masked
+    for dead nodes) alongside the parameters; ``mode="none"`` (the default)
+    runs the exact ``dpsgd_masked_step`` body unchanged.
     """
-    def body(params, xs):
+    if payload.mode == "auto":
+        raise ValueError(
+            "train_on_trace needs a concrete payload mode; \"auto\" is "
+            "resolved by the joint planner at simulation time — train with "
+            "the mode the plan actually picked")
+    compressed = payload.mode != "none"
+
+    def body(carry, xs):
         w, live, batch = xs
-        new_params, losses = dpsgd_masked_step(
-            loss_fn, params, batch, w, live, config)
+        if compressed:
+            params, res = carry
+            new_params, new_res, losses = dpsgd_masked_compressed_step(
+                loss_fn, params, batch, w, live, res, payload, config)
+            new_carry = (new_params, new_res)
+        else:
+            new_params, losses = dpsgd_masked_step(
+                loss_fn, carry, batch, w, live, config)
+            new_carry = new_params
         if collect_node0:
             first = jnp.argmax(live)        # first live row (original-id order)
             snap = jax.tree.map(lambda p: p[first], new_params)
-            return new_params, (losses, snap)
-        return new_params, (losses,)
+            return new_carry, (losses, snap)
+        return new_carry, (losses,)
 
-    final, outs = jax.lax.scan(body, node_params,
+    carry0 = ((node_params, zero_residuals(node_params)) if compressed
+              else node_params)
+    final, outs = jax.lax.scan(body, carry0,
                                (w_seq, live_seq, batch_seq), unroll=unroll)
+    if compressed:
+        final = final[0]
     if collect_node0:
         return final, outs[0], outs[1]
     return final, outs[0]
@@ -103,6 +133,7 @@ def train_on_traces(
     collect_node0: bool = False,
     params_batched: bool = False,
     unroll: int | bool = True,
+    payload: QuantConfig = _NO_PAYLOAD,
 ):
     """``train_on_trace`` vmapped over a leading Monte-Carlo axis.
 
@@ -113,7 +144,7 @@ def train_on_traces(
     """
     def one(p, w, live, b):
         return train_on_trace(loss_fn, p, w, live, b, config, collect_node0,
-                              unroll)
+                              unroll, payload)
 
     return jax.vmap(one, in_axes=(0 if params_batched else None, 0, 0, 0))(
         node_params, w_seq, live_seq, batch_seq)
@@ -186,9 +217,14 @@ def train_cnn_on_traces(
         raise ValueError("train_cnn_on_traces needs at least one config")
     n_nodes = cfgs[0].n_nodes
     eval_every = cfgs[0].eval_every_rounds
+    payload = cfgs[0].payload
     for c in cfgs:
         if c.n_nodes != n_nodes or c.eval_every_rounds != eval_every:
             raise ValueError("configs must share n_nodes/eval_every_rounds")
+        if c.payload != payload:
+            # one scan executable serves the whole family; the quantization
+            # mode is baked into it, so mixed-payload families must split
+            raise ValueError("configs must share the payload QuantConfig")
     cfgs = [c if abs(c.model_bits - cnn.MODEL_BITS) <= 0.5
             else c.replace(model_bits=float(cnn.MODEL_BITS)) for c in cfgs]
 
@@ -229,7 +265,7 @@ def train_cnn_on_traces(
         _cnn_loss, params0,
         jnp.asarray(traces.w_eff), jnp.asarray(traces.live), batches,
         DPSGDConfig(eta=eta), collect_node0=True, params_batched=True,
-        unroll=unroll)
+        unroll=unroll, payload=payload)
 
     live = traces.live                                    # (S, rounds, n)
     raw = np.asarray(losses, dtype=np.float64)            # (S, rounds, n)

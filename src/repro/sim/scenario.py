@@ -24,6 +24,12 @@ vocabulary:
   that is random per round (collision-sampled subgraphs). ``ra_capture``
   adds an SINR capture threshold, so the strongest of colliding signals can
   still get through.
+* ``compressed_bf16`` / ``compressed_int8`` / ``compressed_ra`` — the
+  ``fading`` (respectively ``ra_fading``) world with a compressed gossip
+  payload (``payload: QuantConfig``): Eq. 3 / the RA slot clock charge the
+  **exact wire bits** of the compressed message, and train-on-trace mixes
+  quantized messages with per-node error feedback
+  (``core.dpsgd.dpsgd_masked_compressed_step``).
 
 Register custom scenarios with ``register``; fetch-and-override with
 ``get_scenario(name, **overrides)``.
@@ -34,14 +40,21 @@ import dataclasses
 from typing import Optional
 
 from ..core.channel import ChannelParams
+from ..core.compression import PAYLOAD_MODES, QuantConfig
 from .fading import FadingParams
 from .mac import MacParams
 from .mac_ra import RAParams
 
 __all__ = ["ScenarioConfig", "register", "get_scenario", "list_scenarios",
-           "DEFAULT_MODEL_BITS", "MAC_KINDS"]
+           "DEFAULT_MODEL_BITS", "MAC_KINDS", "SCENARIO_PAYLOAD_MODES"]
 
 MAC_KINDS = ("tdm", "random_access")
+
+# payload modes a scenario may carry: the concrete QuantConfig modes plus
+# "auto" — let the joint planner (rate_opt.solve_joint /
+# access_opt.solve_access_joint) pick the mode per replan. "auto" is a
+# comm-plane setting only; training needs the concrete mode the plan chose.
+SCENARIO_PAYLOAD_MODES = PAYLOAD_MODES + ("auto",)
 
 # paper §IV-A message size: the 21 840-param CNN at float32
 # (== models.cnn.MODEL_BITS; cross-checked in tests/test_sim.py — the sim
@@ -67,6 +80,9 @@ class ScenarioConfig:
     fading_margin_bps: float = 0.0
     # workload
     model_bits: float = DEFAULT_MODEL_BITS
+    # gossip payload compression (core.compression): what actually crosses
+    # the air. Eq. 3 / the RA slot clock charge wire_bits(), not model_bits.
+    payload: QuantConfig = QuantConfig(mode="none")
     lambda_target: float = 0.3
     compute_s_per_round: float = 0.0   # simulated per-iteration compute time
     # time-varying processes (None / "static" / 0.0 = off)
@@ -94,6 +110,10 @@ class ScenarioConfig:
         if self.mac_kind not in MAC_KINDS:
             raise ValueError(
                 f"mac_kind must be one of {MAC_KINDS}, got {self.mac_kind!r}")
+        if self.payload.mode not in SCENARIO_PAYLOAD_MODES:
+            raise ValueError(
+                f"payload.mode must be one of {SCENARIO_PAYLOAD_MODES}, "
+                f"got {self.payload.mode!r}")
         if self.mac_kind == "random_access" and self.reference_mac:
             # there is no pinned-loop RA MAC; silently running ra_round on a
             # config that asked for the reference would make fast-vs-
@@ -102,6 +122,19 @@ class ScenarioConfig:
                 "reference_mac applies to the TDM MAC only; the "
                 "random-access plane has a single implementation "
                 "(its pinned reference is access_opt.solve_access_reference)")
+
+    def wire_bits(self) -> float:
+        """Exact bits one node's broadcast puts on the air under ``payload``
+        — ``model_bits`` verbatim for ``"none"``, otherwise
+        ``compression.payload_bits`` of the model's fp32 lane count (int8:
+        whole padded blocks + one fp32 scale each). ``"auto"`` has no fixed
+        answer: the joint planner resolves it per replan."""
+        if self.payload.mode == "auto":
+            raise ValueError(
+                "payload.mode=\"auto\" is resolved per replan by the joint "
+                "planner; ask the simulator (or its RoundRecords) instead")
+        from ..core.rate_opt import payload_wire_bits
+        return payload_wire_bits(self.model_bits, self.payload.mode)
 
     def channel_params(self) -> ChannelParams:
         return ChannelParams(
@@ -197,6 +230,42 @@ register(ScenarioConfig(
     # the binding constraint rather than slot airtime
     lambda_target=0.5,
     ra=RAParams(capture_db=6.0),
+))
+
+_FADING = FadingParams(rayleigh=True, shadowing_sigma_db=3.0,
+                       shadowing_corr=0.9, coherence_s=0.01)
+
+register(ScenarioConfig(
+    name="compressed_bf16",
+    fading=_FADING,
+    fading_margin_bps=2e6,
+    lambda_target=0.5,
+    mac=MacParams(max_retx_rounds=3),
+    payload=QuantConfig(mode="bf16", error_feedback=False),
+))
+
+register(ScenarioConfig(
+    # the acceptance scenario: dense fading world, int8 + error feedback —
+    # round airtime drops by the exact payload_bits ratio (~3.9x for the
+    # paper's CNN) while EF keeps train-on-trace accuracy at fp32 level
+    name="compressed_int8",
+    fading=_FADING,
+    fading_margin_bps=2e6,
+    lambda_target=0.5,
+    mac=MacParams(max_retx_rounds=3),
+    payload=QuantConfig(mode="int8", error_feedback=True),
+))
+
+register(ScenarioConfig(
+    # compression under contention: shorter slots (wire_bits / min R), same
+    # coupon-collector coverage race — the slot *budget* binds less in time
+    name="compressed_ra",
+    mac_kind="random_access",
+    fading=_FADING,
+    fading_margin_bps=2e6,
+    lambda_target=0.5,
+    ra=RAParams(max_slots=24),
+    payload=QuantConfig(mode="int8", error_feedback=True),
 ))
 
 register(ScenarioConfig(

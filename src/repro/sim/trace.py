@@ -37,7 +37,10 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from ..core.access_opt import solve_access, solve_access_reference
+from ..core.access_opt import (solve_access, solve_access_joint,
+                               solve_access_joint_reference,
+                               solve_access_reference)
+from ..core.rate_opt import solve_joint, solve_joint_reference
 from ..core.topology import adjacency_from_rates, spectral_lambda
 from ..runtime.fault import ElasticController
 from .events import EventKind, EventQueue, SimClock
@@ -76,6 +79,12 @@ class RoundRecord:
     # mac.mean_drift): 0 iff the realized W preserves the global parameter
     # mean; > 0 marks rounds where asymmetric outage biased gossip.
     mean_drift: float = 0.0
+    # exact bits one broadcast put on the air this round (the compressed
+    # payload the MAC charged — == cfg.model_bits when payload.mode="none")
+    # and the payload mode behind it (the joint planner's per-replan pick
+    # under payload.mode="auto")
+    wire_bits: float = 0.0
+    payload_mode: str = "none"
 
     @property
     def t_end_s(self) -> float:
@@ -157,10 +166,20 @@ class WirelessSimulator:
             n_clusters=cfg.n_clusters, spread_m=cfg.cluster_spread_m)
         self.churn = PoissonChurn(cfg.churn_rate_per_s, cfg.seed)
         self.ids: list[int] = list(range(cfg.n_nodes))
+        # what one broadcast actually puts on the air: the exact compressed
+        # payload (Eq. 3 / the RA slot clock charge this, not model_bits).
+        # payload.mode="auto" is resolved per replan by the joint planner;
+        # until the first plan lands, charge the uncompressed size.
+        if cfg.payload.mode == "auto":
+            self.payload_mode = "none"
+            self.wire_bits = float(cfg.model_bits)
+        else:
+            self.payload_mode = cfg.payload.mode
+            self.wire_bits = cfg.wire_bits()
         self.controller = ElasticController(
             n_nodes=cfg.n_nodes, lambda_target=cfg.lambda_target,
             mode="wireless", capacity=self._mean_capacity(),
-            model_bits=cfg.model_bits, solver_method=cfg.solver)
+            model_bits=self.wire_bits, solver_method=cfg.solver)
         self.replans = -1           # initial plan is not a *re*-plan
         self.failures: list[tuple[int, int]] = []
         self._round = 0
@@ -196,16 +215,32 @@ class WirelessSimulator:
         planned (see ``core.access_opt``)."""
         m = self._mean_capacity()
         self.controller.capacity = m
+        joint = self.cfg.payload.mode == "auto"
+        reference = self.cfg.solver.endswith("_reference")
         if self.cfg.mac_kind == "random_access":
-            solver = (solve_access_reference
-                      if self.cfg.solver.endswith("_reference")
-                      else solve_access)
+            if joint:
+                solver = (solve_access_joint_reference if reference
+                          else solve_access_joint)
+            else:
+                solver = solve_access_reference if reference else solve_access
             self.solution = solver(
-                m, self.cfg.model_bits, self.cfg.lambda_target,
+                m, self.cfg.model_bits if joint else self.wire_bits,
+                self.cfg.lambda_target,
                 bandwidth_hz=self.cfg.bandwidth_hz,
                 interference_min_snr=self.cfg.ra.interference_min_snr)
+        elif joint:
+            # the controller's Algorithm 2 path minimizes a fixed wire size;
+            # the joint planner also picks the payload mode, so it replaces
+            # that call (same live-set mean capacity, same density target)
+            jsolve = solve_joint_reference if reference else solve_joint
+            self.solution = jsolve(m, self.cfg.model_bits,
+                                   self.cfg.lambda_target,
+                                   method=self.cfg.solver)
         else:
             self.solution = self.controller.replan()
+        if joint:
+            self.payload_mode = self.solution.mode
+            self.wire_bits = float(self.solution.wire_bits)
         self._plan_cap = m
         self._intended = adjacency_from_rates(
             m, self.solution.rates_bps).astype(bool)
@@ -254,19 +289,19 @@ class WirelessSimulator:
         if cfg.mac_kind == "random_access":
             result = ra_round(
                 self.clock, self.solution.rates_bps, self.solution.p,
-                self._intended, cfg.model_bits,
+                self._intended, self.wire_bits,
                 lambda t: self._capacity_at(pos_round, t), cfg.ra,
                 bandwidth_hz=cfg.bandwidth_hz, round_index=self._round,
                 seed=cfg.seed)
         elif cfg.reference_mac:
             result = tdm_round_reference(
                 self.clock, self.solution.rates_bps, self._intended,
-                cfg.model_bits, lambda t: self._capacity_at(pos_round, t),
+                self.wire_bits, lambda t: self._capacity_at(pos_round, t),
                 cfg.mac)
         else:
             result = tdm_round(
                 self.clock, self.solution.rates_bps, self._intended,
-                cfg.model_bits, lambda t: self._capacity_at(pos_round, t),
+                self.wire_bits, lambda t: self._capacity_at(pos_round, t),
                 cfg.mac,
                 block_index=self.channel.block_indices,
                 capacity_at_times=lambda ts: self.channel.capacity_at_times(
@@ -300,7 +335,9 @@ class WirelessSimulator:
             delivered_frac=result.delivered_frac,
             replanned=replanned,
             loss=metrics.get("loss"), acc=metrics.get("acc"),
-            mean_drift=mean_drift(w_eff))
+            mean_drift=mean_drift(w_eff),
+            wire_bits=self.wire_bits,
+            payload_mode=self.payload_mode)
         self._round += 1
         return rec
 
@@ -371,6 +408,7 @@ class WirelessSimulator:
             t_start_s=np.array([rec.t_start_s for rec in trace.records]),
             t_comm_s=np.array([rec.t_comm_s for rec in trace.records]),
             t_end_s=np.array([rec.t_end_s for rec in trace.records]),
+            wire_bits=np.array([rec.wire_bits for rec in trace.records]),
             trace=trace,
             cfg=self.cfg,
         )
@@ -400,6 +438,7 @@ class TrainTrace:
     t_start_s: np.ndarray   # (rounds,)
     t_comm_s: np.ndarray    # (rounds,)
     t_end_s: np.ndarray     # (rounds,) — comm + cfg.compute_s_per_round
+    wire_bits: np.ndarray   # (rounds,) — exact on-air bits per broadcast
     trace: SimTrace         # the underlying per-round records
     cfg: ScenarioConfig     # the exact config this trace realizes
 
@@ -425,6 +464,7 @@ class TraceBatch:
     t_start_s: np.ndarray   # (S, rounds)
     t_comm_s: np.ndarray    # (S, rounds)
     t_end_s: np.ndarray     # (S, rounds)
+    wire_bits: np.ndarray   # (S, rounds)
     traces: list[TrainTrace]
 
     @property
@@ -456,6 +496,7 @@ def stack_traces(traces: list) -> TraceBatch:
         t_start_s=np.stack([t.t_start_s for t in traces]),
         t_comm_s=np.stack([t.t_comm_s for t in traces]),
         t_end_s=np.stack([t.t_end_s for t in traces]),
+        wire_bits=np.stack([t.wire_bits for t in traces]),
         traces=list(traces),
     )
 
@@ -547,24 +588,40 @@ def simulate_dpsgd_cnn(
 
     if abs(cfg.model_bits - cnn.MODEL_BITS) > 0.5:
         cfg = cfg.replace(model_bits=float(cnn.MODEL_BITS))
+    if cfg.payload.mode == "auto":
+        raise ValueError(
+            "simulate_dpsgd_cnn needs a concrete payload mode; \"auto\" is "
+            "a comm-plane setting (train with the mode the plan picked)")
+    compressed = cfg.payload.mode != "none"
     ds = ds or SyntheticFashion(n_train=n_train, n_test=n_test, seed=0)
     shards = node_splits(ds.train_x, ds.train_y, cfg.n_nodes, seed=0)
     params = dpsgd.replicate(cnn.cnn_init(jax.random.key(cfg.seed)),
                              cfg.n_nodes)
-    step = dpsgd.make_dpsgd_step(lambda p, b: cnn.cnn_loss(p, b),
-                                 DPSGDConfig(eta=eta))
+    if compressed:
+        cstep = dpsgd.make_dpsgd_compressed_step(
+            lambda p, b: cnn.cnn_loss(p, b), cfg.payload, DPSGDConfig(eta=eta))
+    else:
+        step = dpsgd.make_dpsgd_step(lambda p, b: cnn.cnn_loss(p, b),
+                                     DPSGDConfig(eta=eta))
     per_node = len(shards[0][0])
     iters_per_epoch = max(per_node // batch, 1)
     n_rounds = iters_per_epoch * epochs
     test_x = jnp.asarray(ds.test_x[:n_test])
     test_y = jnp.asarray(ds.test_y[:n_test])
 
-    state = {"params": params, "shards": shards}
+    state = {"params": params, "shards": shards,
+             "residuals": dpsgd.zero_residuals(params) if compressed
+             else None}
 
     def driver(ctx: RoundContext) -> dict:
         for survivors in ctx.churn:
             state["params"] = reshape_nodes(state["params"], survivors,
                                             len(survivors))
+            if compressed:
+                # shrink-only surgery: survivor residuals ride along (no
+                # replacement rows exist, so the warm-start mean is unused)
+                state["residuals"] = reshape_nodes(
+                    state["residuals"], survivors, len(survivors))
             state["shards"] = [state["shards"][k] for k in survivors]
         n_live = len(ctx.ids)
         idx = driver_batch_indices(cfg.seed, ctx.round, n_live, per_node,
@@ -574,8 +631,13 @@ def simulate_dpsgd_cnn(
              "labels": jnp.asarray(np.stack(
                 [state["shards"][i][1][idx[i]] for i in range(n_live)]))}
         t0 = time.perf_counter()
-        state["params"], losses = step(state["params"], b,
-                                       jnp.asarray(ctx.w_eff))
+        if compressed:
+            state["params"], state["residuals"], losses = cstep(
+                state["params"], b, jnp.asarray(ctx.w_eff),
+                jnp.ones(n_live, dtype=bool), state["residuals"])
+        else:
+            state["params"], losses = step(state["params"], b,
+                                           jnp.asarray(ctx.w_eff))
         jax.block_until_ready(state["params"])
         out = {"loss": float(losses.mean())}
         if measure_compute:

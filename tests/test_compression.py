@@ -6,7 +6,9 @@ import pytest
 from repro.configs.base import RunConfig
 from repro.core import gossip
 from repro.core.compression import (_BLOCK, QuantConfig, compression_ratio,
-                                    dequantize_int8, quantize_int8)
+                                    dequantize_int8, dequantize_int8_rows,
+                                    payload_bits, quantize_int8,
+                                    quantize_int8_rows)
 from repro.train.step import _mix_leaf, _quantize_rowwise_int8, mix_params
 
 
@@ -99,7 +101,74 @@ def test_error_feedback_mixing_keeps_row_sums_at_one():
         assert float(jnp.abs(new_res["w"]).max()) <= abs(c) / 127.0 + 1e-6
 
 
-def test_compression_ratio_math():
-    assert compression_ratio(QuantConfig("bf16"), 4) == pytest.approx(0.5)
-    assert compression_ratio(QuantConfig("int8"), 4) == pytest.approx(0.25, rel=0.01)
-    assert compression_ratio(QuantConfig("none"), 4) == 1.0
+BLOCK_BITS = _BLOCK * 8 + 32          # one wire block: int8 lanes + f32 scale
+
+
+@pytest.mark.parametrize("n,blocks", [
+    (1, 1), (2047, 1), (_BLOCK, 1), (2049, 2), (3 * _BLOCK + 517, 4)])
+def test_payload_bits_exact_at_non_multiple_lengths(n, blocks):
+    """The wire payload is **whole** blocks: padded int8 lanes plus one fp32
+    scale per (possibly partial) block. The old asymptotic
+    ``compression_ratio`` understated these bytes for every n not a
+    multiple of _BLOCK (at n=1 by ~500x)."""
+    assert payload_bits(n, QuantConfig("int8")) == blocks * BLOCK_BITS
+    assert payload_bits(n, QuantConfig("bf16")) == 16 * n
+    assert payload_bits(n, QuantConfig("none")) == 32 * n
+    # the helper is the exact bit count of what quantize_int8 emits
+    q, scale, _ = quantize_int8(jnp.ones(n))
+    assert payload_bits(n, QuantConfig("int8")) == q.size * 8 + scale.size * 32
+
+
+def test_payload_bits_rejects_unknown_mode_and_negative():
+    with pytest.raises(ValueError, match="mode"):
+        payload_bits(10, QuantConfig("auto"))
+    with pytest.raises(ValueError, match=">= 0"):
+        payload_bits(-1, QuantConfig("int8"))
+    assert payload_bits(0, QuantConfig("int8")) == 0.0
+
+
+def test_compression_ratio_exact():
+    assert compression_ratio(QuantConfig("none"), 123) == 1.0
+    assert compression_ratio(QuantConfig("bf16"), 123) == pytest.approx(0.5)
+    # at a whole block the int8 ratio is the classic ~1/4 (+ scale overhead)
+    assert compression_ratio(QuantConfig("int8"), _BLOCK) == pytest.approx(
+        (1.0 + 4.0 / _BLOCK) / 4.0)
+    # at n=1 the padded block + scale dominate: 16416 bits for 32
+    assert compression_ratio(QuantConfig("int8"), 1) == pytest.approx(
+        BLOCK_BITS / 32.0)
+
+
+def test_dequantize_validates_payload_shapes():
+    """A payload whose scale count disagrees with its block count (or whose
+    lane count is not whole blocks) must fail loudly — the old hard
+    ``reshape(-1, _BLOCK)`` crashed with a shape error at best and silently
+    misaligned scales at worst."""
+    q, scale, n = quantize_int8(jnp.ones(2049))
+    with pytest.raises(ValueError, match="scale count"):
+        dequantize_int8(q, scale[:1], n)
+    with pytest.raises(ValueError, match="whole"):
+        dequantize_int8(q[:-1], scale, n)
+    with pytest.raises(ValueError, match="does not fit"):
+        dequantize_int8(q, scale, q.size + 1)
+    with pytest.raises(ValueError, match="scale count"):
+        dequantize_int8_rows(q[None], jnp.concatenate([scale, scale])[None],
+                             2049)
+    with pytest.raises(ValueError, match="rows"):
+        dequantize_int8_rows(q[None], jnp.stack([scale, scale]), 2049)
+
+
+@pytest.mark.parametrize("l", [1, _BLOCK, 2 * _BLOCK + 100])
+def test_quantize_rows_matches_per_row_1d(l):
+    """Row r of the batched quantizer is exactly ``quantize_int8(x[r])`` —
+    every node's message quantizes independently of its neighbors'."""
+    x = jax.random.normal(jax.random.key(l), (3, l)) * 5
+    q, s = quantize_int8_rows(x)
+    for r in range(3):
+        q1, s1, n1 = quantize_int8(x[r])
+        assert n1 == l
+        assert jnp.array_equal(q[r], q1)
+        assert jnp.array_equal(s[r], s1)
+    deq = dequantize_int8_rows(q, s, l)
+    for r in range(3):
+        np.testing.assert_array_equal(np.asarray(deq[r]),
+                                      np.asarray(dequantize_int8(q[r], s[r], l)))

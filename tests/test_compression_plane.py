@@ -1,0 +1,309 @@
+"""Compression-aware wireless plane: wire-bit charging in Eq. 3 and both
+MACs, the joint rate x payload planners (pinned to their sequential
+references), and quantized error-feedback mixing in the jitted scan.
+
+Load-bearing pins:
+
+* the static scenario under an int8 payload realizes **exactly** the
+  Eq. 3 airtime at the compressed wire bits (the wire-bit anchor), and the
+  dense fading scenario's airtime drops by ~ the exact ``payload_bits``
+  ratio (~3.9x for the paper's CNN) — the acceptance criterion;
+* int8+EF train-on-trace matches the per-round compressed driver <= 1e-5
+  (same gate as the uncompressed parity tests), including through churn;
+* a node that dies mid-trace has its error-feedback residual masked to
+  zero, so nothing leaks into its row if the mask ever flips back on.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import access_opt, channel, rate_opt
+from repro.core.compression import QuantConfig
+from repro.sim import (WirelessSimulator, get_scenario, precompute_trace,
+                       simulate_dpsgd_cnn, train_cnn_on_traces)
+
+TRAIN_KW = dict(epochs=1, n_train=600, n_test=150)
+
+
+def _cap(seed: int, n: int = 6, eps: float = 5.0) -> np.ndarray:
+    pos = channel.random_placement(n, 200.0, seed=seed)
+    return channel.capacity_matrix(pos,
+                                   channel.ChannelParams(path_loss_exp=eps))
+
+
+# ---------------------------------------------------------------------------
+# Wire-bit charging through the simulator
+# ---------------------------------------------------------------------------
+
+def test_static_int8_airtime_is_exact_wire_ratio():
+    """Eq. 3 is linear in the message size, so on the static world the int8
+    payload cuts round airtime by exactly ``model_bits / wire_bits`` — the
+    compressed analogue of the 1e-9 Eq. 3 anchor. Algorithm 2's pick is
+    scale-invariant in M, so the rates must not move either."""
+    base = get_scenario("static")
+    comp = base.replace(payload=QuantConfig(mode="int8"))
+    sim_b, sim_c = WirelessSimulator(base), WirelessSimulator(comp)
+    tb, tc = sim_b.run(6), sim_c.run(6)
+    np.testing.assert_array_equal(sim_b.solution.rates_bps,
+                                  sim_c.solution.rates_bps)
+    exact = base.model_bits / comp.wire_bits()
+    assert exact == pytest.approx(3.8703, abs=1e-3)     # the paper CNN's ~4x
+    ratio = tb.total_comm_s / tc.total_comm_s
+    assert abs(ratio - exact) / exact < 1e-9
+
+
+def test_fading_int8_airtime_drops_by_wire_ratio():
+    """Acceptance pin: on the dense fading scenario the simulated round
+    airtime drops by ~ the exact payload_bits ratio (retransmission noise
+    shifts it a little — the coherence-block alignment changes with packet
+    durations — but the linear-in-M charge dominates)."""
+    tb = WirelessSimulator(get_scenario("fading")).run(12)
+    tc = WirelessSimulator(get_scenario("compressed_int8")).run(12)
+    exact = (get_scenario("fading").model_bits
+             / get_scenario("compressed_int8").wire_bits())
+    ratio = tb.total_comm_s / tc.total_comm_s
+    assert 0.75 * exact < ratio < 1.25 * exact
+
+
+def test_records_and_traces_stamp_wire_bits():
+    cfg = get_scenario("compressed_int8", compute_s_per_round=0.01)
+    tr = precompute_trace(cfg, 3)
+    assert np.all(tr.wire_bits == cfg.wire_bits())
+    for rec in tr.trace.records:
+        assert rec.wire_bits == cfg.wire_bits()
+        assert rec.payload_mode == "int8"
+    # uncompressed scenarios stamp the raw model bits
+    tr0 = precompute_trace("static", 2)
+    assert np.all(tr0.wire_bits == tr0.cfg.model_bits)
+    assert tr0.trace.records[0].payload_mode == "none"
+
+
+def test_ra_slot_clock_charges_wire_bits():
+    """The RA slot is ``wire_bits / min R`` seconds: with the same plan and
+    the same contention draws, a compressed round's airtime per slot shrinks
+    by exactly the wire ratio (``slot_duration_s`` is linear in M)."""
+    from repro.sim.mac_ra import slot_duration_s
+
+    cfg = get_scenario("compressed_ra")
+    rates = np.array([2e6, 3e6, 4e6])
+    assert slot_duration_s(cfg.wire_bits(), rates) == pytest.approx(
+        slot_duration_s(cfg.model_bits, rates) / (cfg.model_bits
+                                                  / cfg.wire_bits()))
+    sim = WirelessSimulator(cfg)
+    trace = sim.run(4)
+    assert sim.wire_bits == cfg.wire_bits()
+    assert all(r.wire_bits == cfg.wire_bits() for r in trace.records)
+
+
+# ---------------------------------------------------------------------------
+# Joint (rate x payload) planners
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("lam_t", [0.3, 0.7, -1.0])
+def test_solve_joint_matches_reference(seed, lam_t):
+    cap = _cap(seed, n=4 + seed % 3, eps=3.5 + 0.5 * seed)
+    a = rate_opt.solve_joint(cap, 698_880.0, lam_t)
+    b = rate_opt.solve_joint_reference(cap, 698_880.0, lam_t)
+    assert a.mode == b.mode and a.wire_bits == b.wire_bits
+    np.testing.assert_array_equal(a.rates_bps, b.rates_bps)
+    assert a.t_com_s == b.t_com_s and a.lam == b.lam
+    assert a.feasible == b.feasible
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_solve_access_joint_matches_reference(seed):
+    cap = _cap(seed, n=4 + seed % 3, eps=3.5 + 0.5 * seed)
+    a = access_opt.solve_access_joint(cap, 698_880.0, 0.5)
+    b = access_opt.solve_access_joint_reference(cap, 698_880.0, 0.5)
+    assert a.mode == b.mode and a.wire_bits == b.wire_bits
+    np.testing.assert_array_equal(a.p, b.p)
+    np.testing.assert_array_equal(a.rates_bps, b.rates_bps)
+    assert a.t_round_s == b.t_round_s and a.lam == b.lam
+
+
+def test_joint_planner_picks_smallest_wire_payload():
+    """lambda(W(R)) never sees the payload, so the joint minimum is the
+    cheapest mode's wire bits on the best rate row — int8 for the paper's
+    CNN — and t_com is Eq. 3 charged at exactly those bits."""
+    cap = _cap(0)
+    sol = rate_opt.solve_joint(cap, 698_880.0, 0.3)
+    assert sol.mode == "int8"
+    assert sol.wire_bits == rate_opt.payload_wire_bits(698_880.0, "int8")
+    base = rate_opt.solve(cap, 698_880.0, 0.3)
+    np.testing.assert_array_equal(sol.rates_bps, base.rates_bps)
+    assert sol.t_com_s == pytest.approx(
+        base.t_com_s * sol.wire_bits / 698_880.0)
+    # restricting the mode axis restores the uncompressed answer
+    only_none = rate_opt.solve_joint(cap, 698_880.0, 0.3, modes=("none",))
+    assert only_none.mode == "none" and only_none.t_com_s == base.t_com_s
+
+
+def test_auto_payload_resolves_per_replan_and_stamps():
+    cfg = get_scenario("fading", payload=QuantConfig(mode="auto"))
+    with pytest.raises(ValueError, match="auto"):
+        cfg.wire_bits()
+    sim = WirelessSimulator(cfg)
+    trace = sim.run(3)
+    assert sim.payload_mode == "int8"
+    assert sim.wire_bits == rate_opt.payload_wire_bits(cfg.model_bits, "int8")
+    assert all(r.payload_mode == "int8" and r.wire_bits == sim.wire_bits
+               for r in trace.records)
+    # the RA plane resolves through solve_access_joint the same way
+    sim_ra = WirelessSimulator(get_scenario(
+        "ra_static", payload=QuantConfig(mode="auto")))
+    sim_ra.run(2)
+    assert sim_ra.payload_mode == "int8"
+
+
+def test_auto_payload_refuses_to_train():
+    cfg = get_scenario("static", payload=QuantConfig(mode="auto"))
+    with pytest.raises(ValueError, match="auto"):
+        simulate_dpsgd_cnn(cfg, **TRAIN_KW)
+    with pytest.raises(ValueError, match="payload.mode"):
+        get_scenario("static", payload=QuantConfig(mode="fp4"))
+
+
+# ---------------------------------------------------------------------------
+# Quantized error-feedback mixing: masked-step semantics + churn
+# ---------------------------------------------------------------------------
+
+def test_dead_node_residual_masked_and_no_revival_leak():
+    """A node that dies mid-trace keeps its parameters verbatim and has its
+    EF residual zeroed; if its live bit ever flips back on, the revival row
+    evolves as if it had a fresh residual — no stale quantization error
+    leaks across the dead span."""
+    import jax.numpy as jnp
+
+    from repro.core.dpsgd import (DPSGDConfig, dpsgd_masked_compressed_step,
+                                  embed_w, zero_residuals)
+
+    def loss(p, b):
+        return jnp.mean((p["x"] - b["t"]) ** 2)
+
+    n = 4
+    rng = np.random.default_rng(0)
+    params = {"x": jnp.asarray(rng.standard_normal((n, 64)) * 3)}
+    batches = {"t": jnp.zeros((n, 64))}
+    quant = QuantConfig(mode="int8", error_feedback=True)
+    cfgd = DPSGDConfig(eta=0.05)
+    w_full = jnp.asarray(np.full((n, n), 1.0 / n))
+    live_all = jnp.ones(n, dtype=bool)
+
+    # round 1 (all live) builds nonzero residuals
+    p1, r1, _ = dpsgd_masked_compressed_step(
+        loss, params, batches, w_full, live_all, zero_residuals(params),
+        quant, cfgd)
+    assert float(jnp.abs(r1["x"]).max()) > 0.0
+
+    # round 2: node 0 dies — embed_w identity row/zero column, masked live
+    live = live_all.at[0].set(False)
+    w_dead = jnp.asarray(embed_w(np.full((n - 1, n - 1), 1.0 / (n - 1)),
+                                 np.arange(1, n), n))
+    p2, r2, _ = dpsgd_masked_compressed_step(
+        loss, p1, batches, w_dead, live, r1, quant, cfgd)
+    np.testing.assert_array_equal(np.asarray(p2["x"][0]),
+                                  np.asarray(p1["x"][0]))   # frozen verbatim
+    assert float(jnp.abs(r2["x"][0]).max()) == 0.0          # residual masked
+
+    # round 3: the mask flips back on — the revival row must match a step
+    # taken with an explicitly fresh residual for node 0
+    p3, _, _ = dpsgd_masked_compressed_step(
+        loss, p2, batches, w_full, live_all, r2, quant, cfgd)
+    fresh = {"x": r2["x"].at[0].set(0.0)}                   # == r2 already
+    p3_ref, _, _ = dpsgd_masked_compressed_step(
+        loss, p2, batches, w_full, live_all, fresh, quant, cfgd)
+    np.testing.assert_array_equal(np.asarray(p3["x"]), np.asarray(p3_ref["x"]))
+
+
+def test_compressed_mode_none_is_exact_masked_step():
+    import jax.numpy as jnp
+
+    from repro.core.dpsgd import (dpsgd_masked_compressed_step,
+                                  dpsgd_masked_step, zero_residuals)
+
+    def loss(p, b):
+        return jnp.mean((p["x"] - b["t"]) ** 2)
+
+    params = {"x": jnp.asarray(np.random.default_rng(1).standard_normal((3, 8)))}
+    batches = {"t": jnp.ones((3, 8))}
+    w = jnp.asarray(np.full((3, 3), 1.0 / 3))
+    live = jnp.ones(3, dtype=bool)
+    res0 = zero_residuals(params)
+    a, ra, la = dpsgd_masked_compressed_step(
+        loss, params, batches, w, live, res0, QuantConfig(mode="none"))
+    b, lb = dpsgd_masked_step(loss, params, batches, w, live)
+    np.testing.assert_array_equal(np.asarray(a["x"]), np.asarray(b["x"]))
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    np.testing.assert_array_equal(np.asarray(ra["x"]), np.asarray(res0["x"]))
+
+
+# ---------------------------------------------------------------------------
+# Scan-vs-driver parity + accuracy (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+def test_int8_ef_scan_matches_driver():
+    """int8+EF train-on-trace reproduces the per-round compressed driver to
+    <= 1e-5 — the same gate as the uncompressed parity pins."""
+    cfg = get_scenario("compressed_int8", compute_s_per_round=0.05,
+                       eval_every_rounds=2)
+    trace, _ = simulate_dpsgd_cnn(cfg, **TRAIN_KW)
+    traces, scan = train_cnn_on_traces([cfg], **TRAIN_KW)
+    drv = np.array([r.loss for r in trace.records])
+    assert np.abs(drv - scan["losses"][0]).max() <= 1e-5
+    drv_acc = trace.accuracy_curve()
+    assert len(drv_acc) == len(scan["curves"][0])
+    for (td, ad), (ts, a_s) in zip(drv_acc, scan["curves"][0]):
+        assert td == pytest.approx(ts, rel=1e-12)
+        assert ad == pytest.approx(a_s, abs=1e-5)
+
+
+def test_int8_ef_churn_scan_matches_driver():
+    """Error feedback composes with churn: the masked residual carry tracks
+    the reshape-based compressed driver through a node failure."""
+    cfg = get_scenario("churn", churn_rate_per_s=0.4, solver="greedy",
+                       compute_s_per_round=0.05, eval_every_rounds=2,
+                       payload=QuantConfig(mode="int8"))
+    trace, _ = simulate_dpsgd_cnn(cfg, **TRAIN_KW)
+    assert len(trace.failures) >= 1
+    traces, scan = train_cnn_on_traces([cfg], **TRAIN_KW)
+    drv = np.array([r.loss for r in trace.records])
+    assert np.abs(drv - scan["losses"][0]).max() <= 1e-5
+
+
+def test_int8_ef_accuracy_within_tolerance_of_fp32():
+    """Acceptance pin, accuracy half: with error feedback on, int8 payloads
+    train to fp32-level accuracy on the dense fading world — while their
+    trace finishes in ~1/3.9 the simulated airtime."""
+    f32 = get_scenario("fading", eval_every_rounds=2)
+    q8 = get_scenario("compressed_int8", eval_every_rounds=2)
+    tr_f, out_f = train_cnn_on_traces([f32], **TRAIN_KW)
+    tr_q, out_q = train_cnn_on_traces([q8], **TRAIN_KW)
+    acc_f = float(out_f["acc"][0, -1])
+    acc_q = float(out_q["acc"][0, -1])
+    assert abs(acc_q - acc_f) <= 0.15
+    # and the runtime axis actually moved: the compressed curve's final
+    # simulated-time stamp sits far left of the fp32 one
+    t_f = tr_f.traces[0].trace.summary()["total_comm_s"]
+    t_q = tr_q.traces[0].trace.summary()["total_comm_s"]
+    assert t_q < 0.4 * t_f
+
+
+def test_mixed_payload_families_rejected():
+    cfgs = [get_scenario("fading"), get_scenario("compressed_int8")]
+    with pytest.raises(ValueError, match="payload"):
+        train_cnn_on_traces(cfgs, **TRAIN_KW)
+
+
+def test_sweep_deterministic_with_compression():
+    """Compressed scenarios replay bit-identically (the wire-bit charge and
+    EF state are deterministic in the config)."""
+    from repro.sim import sweep
+
+    cfgs = [get_scenario("compressed_int8", seed=s, solver="greedy")
+            for s in (0, 1)]
+    t1, t2 = sweep(cfgs, 5), sweep(cfgs, 5)
+    for a, b in zip(t1, t2):
+        for ra, rb in zip(a.records, b.records):
+            assert dataclasses.asdict(ra) == dataclasses.asdict(rb)

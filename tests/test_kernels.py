@@ -24,6 +24,57 @@ def test_gossip_mix(k, n, dtype):
     assert got.dtype == dtype
 
 
+@pytest.mark.parametrize("n", [100, 8192, 10000, 21840])
+@pytest.mark.parametrize("k", [1, 4])
+def test_gossip_mix_q8(k, n):
+    """Fused int8 receive path: exact self buffer + K blockwise-int8
+    payloads with per-block scales, dequantized in VMEM, fp32 accumulate —
+    vs the pure-jnp oracle."""
+    from repro.core.compression import quantize_int8
+
+    raw = jax.random.normal(jax.random.key(0), (k, n)) * 4
+    self_buf = jax.random.normal(jax.random.key(1), (n,))
+    q_bufs = jnp.stack([quantize_int8(raw[i])[0] for i in range(k)])
+    scales = jnp.stack([quantize_int8(raw[i])[1] for i in range(k)])
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (k + 1,)))
+    got = ops.gossip_mix_q8(self_buf, q_bufs, scales, w)
+    want = ref.gossip_mix_q8_ref(self_buf, q_bufs, scales, w)
+    assert got.dtype == jnp.float32 and got.shape == (n,)
+    assert _err(got, want) < 1e-5
+
+
+def test_gossip_mix_q8_rejects_ragged_scales():
+    q = jnp.zeros((2, 4096), jnp.int8)
+    with pytest.raises(ValueError, match="scale"):
+        ops.gossip_mix_q8(jnp.zeros(100), q, jnp.ones((2, 3)),
+                          jnp.ones(3) / 3)
+    with pytest.raises(ValueError, match="shorter"):
+        ops.gossip_mix_q8(jnp.zeros(9000), q, jnp.ones((2, 2)),
+                          jnp.ones(3) / 3)
+
+
+def test_default_interpret_tracks_live_backend(monkeypatch):
+    """The interpret default must follow the *current* backend per call —
+    the old ``functools.cache`` froze the first answer, so a TPU attached
+    after import stayed in interpret mode forever. An explicit bool always
+    overrides."""
+    from repro.kernels import gossip_mix as gm
+
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert gm._default_interpret() is True
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert gm._default_interpret() is False         # re-evaluated per call
+    # explicit override beats the (pretend-TPU) auto-selection: interpret
+    # mode still runs fine on this CPU-only host
+    bufs = jax.random.normal(jax.random.key(0), (2, 300))
+    w = jnp.array([0.5, 0.5])
+    out = ops.gossip_mix(bufs, w, interpret=True)
+    assert _err(out, ref.gossip_mix_ref(bufs, w)) < 1e-5
+    monkeypatch.setattr(jax, "default_backend",
+                        lambda: (_ for _ in ()).throw(RuntimeError("boom")))
+    assert gm._default_interpret() is True          # failure-safe fallback
+
+
 @pytest.mark.parametrize("s,hq,hkv,d", [
     (64, 4, 4, 32),    # MHA
     (80, 4, 2, 32),    # GQA, ragged seq

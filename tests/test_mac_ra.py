@@ -295,7 +295,8 @@ def test_every_registered_scenario_precomputes_and_trains(name):
     batches = {"target": jnp.ones((3, n, 4))}
     final, losses = train_on_trace(_toy_loss, params,
                                    jnp.asarray(tr.w_eff),
-                                   jnp.asarray(tr.live), batches)
+                                   jnp.asarray(tr.live), batches,
+                                   payload=cfg.payload)
     assert np.asarray(losses).shape == (3, n)
     assert np.isfinite(np.asarray(losses)[np.asarray(tr.live)]).all()
     # gradient descent toward the shared target actually happened
