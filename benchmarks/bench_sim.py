@@ -21,6 +21,12 @@ Measures (median + min over several runs each):
   communication time (the airtime drop tracks the exact ``payload_bits``
   ratio, ~3.9x for int8), and the accuracy-vs-simulated-time curves of the
   quantized train-on-trace path.
+* ``policy_compare`` — the scheduling-policy plane head to head on the SAME
+  fading world: TDM (``fading``) vs uniform random access (``ra_fading``)
+  vs BASS subgraph sampling (``bass_fading``), one ``train_cnn_on_traces``
+  call. Reports per-policy communication time, final accuracy, and
+  **time-to-accuracy** (first simulated second reaching the best accuracy
+  every policy attains) — the objective ``core.sched_opt`` optimizes.
 
 Cross-checks (``checks`` in the JSON, process exits 1 on any failure):
 
@@ -31,6 +37,11 @@ Cross-checks (``checks`` in the JSON, process exits 1 on any failure):
 * the joint rate x payload planners (``rate_opt.solve_joint``,
   ``access_opt.solve_access_joint``) == their sequential references,
   including the picked mode and exact wire bits;
+* ``sched_opt.solve_schedule`` (batched accuracy-per-second sweep) == its
+  pinned sequential reference over random placements, fraction grids, and
+  duty cycles — and ``policy_compare``'s BASS policy must beat BOTH TDM and
+  uniform RA on time-to-accuracy in the fading world (the scheduling
+  plane's acceptance criterion);
 * a fast-MAC and a reference-MAC simulator run of the same scenario produce
   identical round durations / retx / outage / delivered fractions;
 * the static scenario still reproduces Eq. 3 to 1e-9 relative — and its
@@ -319,6 +330,73 @@ def check_compression(quick: bool) -> dict:
     }
 
 
+def bench_policy_compare(quick: bool) -> dict:
+    """TDM vs uniform RA vs BASS on the same fading placement: the CNN
+    trained through all three scheduling policies in one batched scan/vmap
+    call; the headline metric is time-to-accuracy — the first simulated
+    second each policy reaches the best accuracy ALL of them attain."""
+    import time as _time
+
+    from repro.sim import train_cnn_on_traces
+
+    n_train = 300 if quick else 1200
+    cfgs = [get_scenario("fading", eval_every_rounds=2),
+            get_scenario("ra_fading", eval_every_rounds=2),
+            get_scenario("bass_fading", eval_every_rounds=2)]
+    t0 = _time.perf_counter()
+    traces, out = train_cnn_on_traces(cfgs, epochs=1, n_train=n_train,
+                                      n_test=150)
+    dt = _time.perf_counter() - t0
+    target = float(out["acc"][:, -1].min())
+    result: dict = {"t_wall_s": dt, "rounds": traces.n_rounds,
+                    "target_acc": target, "policies": {}}
+    tta: dict = {}
+    for k, cfg in enumerate(cfgs):
+        s = traces.traces[k].trace.summary()
+        kind = cfg.resolved_policy()
+        curve = out["curves"][k]
+        tta[kind] = next((float(t) for t, a in curve if a >= target),
+                         float("inf"))
+        result["policies"][kind] = {
+            "scenario": cfg.name,
+            "comm_s": s["total_comm_s"],
+            "outage_rate": s["outage_rate"],
+            "final_acc": float(out["acc"][k, -1]),
+            "time_to_target_s": tta[kind],
+            "curve": [[float(t), float(a)] for t, a in curve],
+        }
+    result["winner"] = min(tta, key=tta.get)
+    result["bass_beats_tdm_and_ra"] = bool(
+        tta["bass"] < tta["tdm"] and tta["bass"] < tta["uniform_ra"])
+    return result
+
+
+def check_sched(quick: bool) -> dict:
+    """Batched (rates x fraction) accuracy-per-second sweep vs its pinned
+    sequential reference — bit-identical over random placements, fraction
+    grids, and duty cycles (the scheduling-plane analogue of
+    ``check_access``)."""
+    from repro.core import sched_opt
+
+    ok = True
+    seeds = range(2) if quick else range(5)
+    for seed in seeds:
+        n = 4 + seed % 3
+        pos = channel.random_placement(n, 200.0, seed=seed)
+        cap = channel.capacity_matrix(
+            pos, channel.ChannelParams(path_loss_exp=3.5 + 0.5 * seed))
+        for duty in (1.0, 0.5):
+            a = sched_opt.solve_schedule(cap, M_BITS, duty_cycle=duty)
+            b = sched_opt.solve_schedule_reference(cap, M_BITS,
+                                                   duty_cycle=duty)
+            ok &= (np.array_equal(a.rates_bps, b.rates_bps)
+                   and a.tx_fraction == b.tx_fraction
+                   and a.lam == b.lam and a.score_s == b.score_s
+                   and a.t_round_s == b.t_round_s
+                   and a.feasible == b.feasible)
+    return {"solve_schedule": bool(ok)}
+
+
 def bench_sweep(quick: bool) -> dict:
     seeds = range(2) if quick else range(5)
     configs = [get_scenario(name, seed=s, solver="greedy")
@@ -354,10 +432,12 @@ def main(argv=None) -> int:
         "sweep": bench_sweep(args.quick),
         "mac_compare": bench_mac_compare(args.quick),
         "compression_compare": bench_compression_compare(args.quick),
+        "policy_compare": bench_policy_compare(args.quick),
         "checks": {
             "solver": check_solvers(args.quick),
             "access": check_access(args.quick),
             "compression": check_compression(args.quick),
+            "sched": check_sched(args.quick),
             "mac": check_mac(4 if args.quick else 8),
         },
     }
@@ -367,6 +447,8 @@ def main(argv=None) -> int:
               or not all(checks["access"].values())
               or not all(v for k, v in checks["compression"].items()
                          if isinstance(v, bool))
+              or not all(checks["sched"].values())
+              or not result["policy_compare"]["bass_beats_tdm_and_ra"]
               or not all(v for k, v in checks["mac"].items()
                          if isinstance(v, bool)))
     result["ok"] = not failed

@@ -23,6 +23,12 @@ Three demos, all on the paper's setup (n=6 nodes, 200 m square, the
    through both MAC planes on the same placement, accuracy stamped with
    each plane's own simulated clock (collision-free schedule vs
    slots-until-coverage contention).
+6. ``--policy-compare`` — the scheduling-policy plane: TDM vs uniform
+   random access vs BASS subgraph sampling on the SAME fading world
+   (``fading`` / ``ra_fading`` / ``bass_fading``), accuracy vs each
+   policy's own simulated clock plus a time-to-accuracy summary (first
+   simulated second reaching the best accuracy every policy attains — the
+   objective ``core.sched_opt`` plans for).
 
 ``--scenario PATTERN`` restricts the ``--compare`` table to scenarios whose
 name matches the glob (e.g. ``--scenario 'ra_*'`` for the random-access
@@ -45,6 +51,8 @@ Usage:
     PYTHONPATH=src python -m examples.sim_scenarios --margin-sweep
     PYTHONPATH=src python -m examples.sim_scenarios --train-sweep fading --seeds 4
     PYTHONPATH=src python -m examples.sim_scenarios --mac-compare
+    PYTHONPATH=src python -m examples.sim_scenarios --policy-compare
+    PYTHONPATH=src python -m examples.sim_scenarios --scenario 'bass_*'
 """
 from __future__ import annotations
 
@@ -72,14 +80,21 @@ def compare(rounds: int, solver: str, pattern: str = "*",
     names = [n for n in list_scenarios() if fnmatch.fnmatch(n, pattern)]
     if not names:
         raise SystemExit(f"no registered scenario matches {pattern!r}")
-    print(f"{'scenario':>15} {'mac':>6} {'payload':>7} {'Mb/bcast':>8} "
+    print(f"{'scenario':>15} {'policy':>6} {'payload':>7} {'Mb/bcast':>8} "
           f"{'comm_s':>9} {'outage':>7} "
           f"{'retx':>6} {'replans':>7} {'fails':>5} {'n_end':>5}")
     for name in names:
-        cfg = _fetch(name, payload, solver=solver)
+        if payload == "auto" and \
+                get_scenario(name).resolved_policy() == "bass":
+            # sched_opt plans rates and fractions, not payload modes; keep
+            # the registered payload so the table still shows the bass rows
+            cfg = get_scenario(name, solver=solver)
+        else:
+            cfg = _fetch(name, payload, solver=solver)
         trace = WirelessSimulator(cfg).run(rounds)
         s = trace.summary()
-        mac = "ra" if cfg.mac_kind == "random_access" else "tdm"
+        mac = {"uniform_ra": "ra"}.get(cfg.resolved_policy(),
+                                       cfg.resolved_policy())
         last = trace.records[-1]
         print(f"{name:>15} {mac:>6} {last.payload_mode:>7} "
               f"{last.wire_bits / 1e6:>8.3f} {s['total_comm_s']:>9.2f} "
@@ -105,6 +120,30 @@ def mac_compare(epochs: int, payload: str | None = None) -> None:
         s = traces.traces[k].trace.summary()
         print(f"# {cfg.name}: comm {s['total_comm_s']:.1f}s, "
               f"final acc {out['acc'][k, -1]:.4f}")
+
+
+def policy_compare(epochs: int, payload: str | None = None) -> None:
+    """Same fading world, three scheduling policies: accuracy vs each
+    policy's own simulated wall-clock, plus time-to-accuracy — what chosen
+    collision-free subgraphs are worth over a fixed schedule (TDM) and
+    over contention-lost random subgraphs (uniform RA)."""
+    cfgs = [_fetch("fading", payload, eval_every_rounds=2),
+            _fetch("ra_fading", payload, eval_every_rounds=2),
+            _fetch("bass_fading", payload, eval_every_rounds=2)]
+    traces, out = train_cnn_on_traces(cfgs, epochs=epochs, n_train=600,
+                                      n_test=150)
+    print("scenario,policy,t_sim_s,accuracy")
+    for k, cfg in enumerate(cfgs):
+        for t, acc in out["curves"][k]:
+            print(f"{cfg.name},{cfg.resolved_policy()},{t:.2f},{acc:.4f}")
+    target = float(out["acc"][:, -1].min())
+    for k, cfg in enumerate(cfgs):
+        s = traces.traces[k].trace.summary()
+        tta = next((t for t, a in out["curves"][k] if a >= target),
+                   float("inf"))
+        print(f"# {cfg.name} ({cfg.resolved_policy()}): comm "
+              f"{s['total_comm_s']:.1f}s, final acc {out['acc'][k, -1]:.4f},"
+              f" reaches acc {target:.3f} at {tta:.1f}s sim")
 
 
 def train(name: str, epochs: int, solver: str,
@@ -169,6 +208,9 @@ def main(argv: list[str] | None = None) -> None:
     mode.add_argument("--margin-sweep", action="store_true")
     mode.add_argument("--mac-compare", action="store_true",
                       help="TDM vs random-access accuracy-vs-sim-time")
+    mode.add_argument("--policy-compare", action="store_true",
+                      help="TDM vs uniform-RA vs BASS accuracy-vs-sim-time "
+                           "+ time-to-accuracy")
     p.add_argument("--scenario", default="*", metavar="PATTERN",
                    help="glob filter for --compare (e.g. 'ra_*')")
     p.add_argument("--payload", default=None,
@@ -184,7 +226,8 @@ def main(argv: list[str] | None = None) -> None:
                    help="rate_opt method for (re)plans; 'auto' = exact")
     args = p.parse_args(argv)
     if args.payload == "auto" and (args.train or args.train_sweep
-                                   or args.mac_compare):
+                                   or args.mac_compare
+                                   or args.policy_compare):
         # reject before the trace precompute burns minutes: training needs
         # the concrete mode the plan picked, not the planner's choice knob
         p.error("--payload auto is comm-only (--compare / --margin-sweep); "
@@ -198,6 +241,8 @@ def main(argv: list[str] | None = None) -> None:
         margin_sweep(args.rounds, args.solver, args.payload)
     elif args.mac_compare:
         mac_compare(args.epochs, args.payload)
+    elif args.policy_compare:
+        policy_compare(args.epochs, args.payload)
     else:
         compare(args.rounds, args.solver, args.scenario, args.payload)
 

@@ -2,12 +2,15 @@
 
 Wireless-faithful pieces: channel (Eq. 2), topology (Eq. 4), bound (Eq. 6/7),
 rate_opt (Eq. 8 / Algorithm 2), comm_model (Eq. 3), dpsgd (Algorithm 1/Eq. 5),
-access_opt (the Algorithm-2 analogue for the random-access MAC).
+access_opt (the Algorithm-2 analogue for the random-access MAC),
+sched_opt (the accuracy-per-second BASS scheduling planner).
 Pod-mode adaptation: gossip (ppermute mixing), density_controller (Eq. 8 on
 mesh link models), compression (beyond-paper quantized gossip).
 """
 from . import (access_opt, bound, channel, comm_model, compression,
-               density_controller, dpsgd, gossip, rate_opt, topology)
+               density_controller, dpsgd, gossip, rate_opt, sched_opt,
+               topology)
 
 __all__ = ["access_opt", "bound", "channel", "comm_model", "compression",
-           "density_controller", "dpsgd", "gossip", "rate_opt", "topology"]
+           "density_controller", "dpsgd", "gossip", "rate_opt", "sched_opt",
+           "topology"]

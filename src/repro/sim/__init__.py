@@ -18,8 +18,11 @@ Modules:
   SINR capture, slots-until-coverage airtime (planned by
   ``core.access_opt``)
 * ``mobility`` — waypoint/cluster motion + Poisson churn
+* ``policy``   — scheduling-policy plane: per-round transmitter set, rates,
+  slot plan (``TDMPolicy`` / ``UniformRAPolicy`` adapters + BASS-style
+  sampled collision-free broadcast groups planned by ``core.sched_opt``)
 * ``scenario`` — named scenario registry (static/fading/mobile/churn/mixed
-  + the ``ra_*`` random-access family)
+  + the ``ra_*`` random-access and ``bass_*`` subgraph-sampling families)
 * ``trace``    — event loop, per-round traces, accuracy-vs-simulated-time,
   driver-less ``precompute_trace`` (fixed-shape channel realizations)
 * ``batch``    — train-on-trace: jitted ``lax.scan`` training over
@@ -34,8 +37,11 @@ from .mac import (MacParams, RoundResult, mean_drift, tdm_round,
 from .mac_ra import RAParams, ra_round
 from .mobility import (ClusterMobility, PoissonChurn, RandomWaypoint,
                        StaticMobility, make_mobility)
-from .scenario import (DEFAULT_MODEL_BITS, MAC_KINDS, ScenarioConfig,
-                       get_scenario, list_scenarios, register)
+from .policy import (BASSParams, BASSPolicy, EnergyBASSPolicy, PolicyRound,
+                     SchedulingPolicy, TDMPolicy, UniformRAPolicy,
+                     bass_round, make_policy)
+from .scenario import (DEFAULT_MODEL_BITS, MAC_KINDS, POLICY_KINDS,
+                       ScenarioConfig, get_scenario, list_scenarios, register)
 from .trace import (RoundContext, RoundRecord, SimTrace, TraceBatch,
                     TrainTrace, WirelessSimulator, precompute_trace,
                     precompute_traces, simulate_dpsgd_cnn, stack_traces,
@@ -50,8 +56,11 @@ __all__ = [
     "RAParams", "ra_round",
     "ClusterMobility", "PoissonChurn", "RandomWaypoint", "StaticMobility",
     "make_mobility",
-    "DEFAULT_MODEL_BITS", "MAC_KINDS", "ScenarioConfig", "get_scenario",
-    "list_scenarios", "register",
+    "BASSParams", "BASSPolicy", "EnergyBASSPolicy", "PolicyRound",
+    "SchedulingPolicy", "TDMPolicy", "UniformRAPolicy", "bass_round",
+    "make_policy",
+    "DEFAULT_MODEL_BITS", "MAC_KINDS", "POLICY_KINDS", "ScenarioConfig",
+    "get_scenario", "list_scenarios", "register",
     "RoundContext", "RoundRecord", "SimTrace", "TraceBatch", "TrainTrace",
     "WirelessSimulator", "precompute_trace", "precompute_traces",
     "simulate_dpsgd_cnn", "stack_traces", "sweep",

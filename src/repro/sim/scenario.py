@@ -31,8 +31,17 @@ vocabulary:
   quantized messages with per-node error feedback
   (``core.dpsgd.dpsgd_masked_compressed_step``).
 
+* ``bass_static`` / ``bass_fading`` / ``bass_energy`` — the **scheduling-
+  policy plane** (``policy="bass"``, ``sim.policy.BASSPolicy``):
+  importance-sampled collision-free broadcast subsets each round, planned
+  by ``core.sched_opt`` for accuracy per simulated second rather than round
+  time under a fixed lambda. ``bass_energy`` additionally duty-cycles every
+  node to half the rounds (``BASSParams(duty_cycle=0.5)``).
+
 Register custom scenarios with ``register``; fetch-and-override with
-``get_scenario(name, **overrides)``.
+``get_scenario(name, **overrides)`` — overrides reach **nested** param
+dataclasses via dotted keys (``**{"ra.max_slots": 8}``) or sub-dict merge
+(``ra={"max_slots": 8}``).
 """
 from __future__ import annotations
 
@@ -44,9 +53,11 @@ from ..core.compression import PAYLOAD_MODES, QuantConfig
 from .fading import FadingParams
 from .mac import MacParams
 from .mac_ra import RAParams
+from .policy import BASSParams, POLICY_KINDS
 
 __all__ = ["ScenarioConfig", "register", "get_scenario", "list_scenarios",
-           "DEFAULT_MODEL_BITS", "MAC_KINDS", "SCENARIO_PAYLOAD_MODES"]
+           "DEFAULT_MODEL_BITS", "MAC_KINDS", "POLICY_KINDS",
+           "SCENARIO_PAYLOAD_MODES"]
 
 MAC_KINDS = ("tdm", "random_access")
 
@@ -98,6 +109,14 @@ class ScenarioConfig:
     mac_kind: str = "tdm"
     mac: MacParams = dataclasses.field(default_factory=MacParams)
     ra: RAParams = dataclasses.field(default_factory=RAParams)
+    # scheduling policy (sim.policy): who transmits each round. "auto"
+    # derives from mac_kind (tdm -> TDMPolicy, random_access ->
+    # UniformRAPolicy) so pre-policy configs behave identically; "bass"
+    # activates sampled collision-free broadcast subsets planned by
+    # core.sched_opt (lambda_target is non-binding there — the planner
+    # optimizes time-to-accuracy, not round time at a pinned density).
+    policy: str = "auto"
+    bass: BASSParams = dataclasses.field(default_factory=BASSParams)
     reference_mac: bool = False        # pinned per-packet loop MAC (benchmarks)
     # replan policy (Algorithm 2 re-runs)
     solver: str = "auto"               # rate_opt.solve method (auto = exact)
@@ -110,18 +129,35 @@ class ScenarioConfig:
         if self.mac_kind not in MAC_KINDS:
             raise ValueError(
                 f"mac_kind must be one of {MAC_KINDS}, got {self.mac_kind!r}")
+        if self.policy not in POLICY_KINDS:
+            raise ValueError(
+                f"policy must be one of {POLICY_KINDS}, got {self.policy!r}")
         if self.payload.mode not in SCENARIO_PAYLOAD_MODES:
             raise ValueError(
                 f"payload.mode must be one of {SCENARIO_PAYLOAD_MODES}, "
                 f"got {self.payload.mode!r}")
-        if self.mac_kind == "random_access" and self.reference_mac:
-            # there is no pinned-loop RA MAC; silently running ra_round on a
-            # config that asked for the reference would make fast-vs-
-            # reference cross-checks pass vacuously
+        if self.reference_mac and self.resolved_policy() != "tdm":
+            # there is no pinned-loop RA/BASS MAC; silently running the fast
+            # round on a config that asked for the reference would make
+            # fast-vs-reference cross-checks pass vacuously
             raise ValueError(
-                "reference_mac applies to the TDM MAC only; the "
-                "random-access plane has a single implementation "
-                "(its pinned reference is access_opt.solve_access_reference)")
+                "reference_mac applies to the TDM MAC only; the other "
+                "policies have a single round implementation (their pinned "
+                "references live in access_opt/sched_opt)")
+        if self.resolved_policy() == "bass" and self.payload.mode == "auto":
+            raise ValueError(
+                "policy=\"bass\" plans rates and transmit fractions; the "
+                "joint rate x payload sweep is not wired into sched_opt — "
+                "pick a concrete payload.mode")
+
+    def resolved_policy(self) -> str:
+        """The scheduling-policy kind a simulator will instantiate:
+        ``policy`` verbatim, or — ``"auto"`` — the pre-policy mapping from
+        ``mac_kind`` (kept so every PR-1..5 config runs bit-identically
+        through the policy plane)."""
+        if self.policy != "auto":
+            return self.policy
+        return "uniform_ra" if self.mac_kind == "random_access" else "tdm"
 
     def wire_bits(self) -> float:
         """Exact bits one node's broadcast puts on the air under ``payload``
@@ -146,7 +182,40 @@ class ScenarioConfig:
         )
 
     def replace(self, **kw) -> "ScenarioConfig":
-        return dataclasses.replace(self, **kw)
+        """``dataclasses.replace`` extended to reach **nested** param
+        dataclasses: a dotted key (``**{"ra.max_slots": 8}``, arbitrary
+        depth) or a dict value on a dataclass field (``ra={"max_slots": 8}``)
+        merges into the existing nested value instead of requiring a
+        hand-built replacement dataclass. Unknown field names raise."""
+        return _nested_replace(self, kw)
+
+
+def _nested_replace(obj, overrides: dict):
+    """Recursive ``dataclasses.replace``: dotted keys and dict-valued
+    overrides of dataclass fields merge into the nested value."""
+    flat: dict = {}
+    nested: dict[str, dict] = {}
+    for key, val in overrides.items():
+        if "." in key:
+            head, rest = key.split(".", 1)
+            nested.setdefault(head, {})[rest] = val
+        elif isinstance(val, dict) and dataclasses.is_dataclass(
+                getattr(obj, key, None)):
+            nested.setdefault(key, {}).update(val)
+        else:
+            flat[key] = val
+    for head, sub in nested.items():
+        if head in flat:
+            raise ValueError(
+                f"conflicting overrides for field {head!r}: both a whole-"
+                f"value replacement and nested keys {sorted(sub)}")
+        current = getattr(obj, head, None)
+        if not dataclasses.is_dataclass(current):
+            raise ValueError(
+                f"cannot apply nested override {head!r}: "
+                f"{type(obj).__name__}.{head} is not a param dataclass")
+        flat[head] = _nested_replace(current, sub)
+    return dataclasses.replace(obj, **flat)
 
 
 _REGISTRY: dict[str, ScenarioConfig] = {}
@@ -266,6 +335,36 @@ register(ScenarioConfig(
     lambda_target=0.5,
     ra=RAParams(max_slots=24),
     payload=QuantConfig(mode="int8", error_feedback=True),
+))
+
+register(ScenarioConfig(
+    # the paper's static world under subgraph sampling: sched_opt picks
+    # (rates, transmit fraction) for time-to-accuracy; at f=1 the grouped
+    # collision-free schedule is a spatial-reuse TDM (round time <= Eq. 3)
+    name="bass_static",
+    policy="bass",
+))
+
+register(ScenarioConfig(
+    # the acceptance scenario for policy_compare: same fading world as
+    # "fading"/"ra_fading", but the realized per-round subgraph is *chosen*
+    # (importance-sampled collision-free groups) instead of contention-lost
+    name="bass_fading",
+    policy="bass",
+    fading=_FADING,
+    fading_margin_bps=2e6,
+    lambda_target=0.5,
+))
+
+register(ScenarioConfig(
+    # energy-budgeted BASS: every node duty-cycled to half the rounds; the
+    # planner scores E[W] at the capped marginal q = min(f, duty_cycle)
+    name="bass_energy",
+    policy="bass",
+    fading=_FADING,
+    fading_margin_bps=2e6,
+    lambda_target=0.5,
+    bass=BASSParams(duty_cycle=0.5),
 ))
 
 register(ScenarioConfig(

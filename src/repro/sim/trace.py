@@ -2,12 +2,10 @@
 
 ``WirelessSimulator`` ties the subsystem together: one ``EventQueue`` orders
 round starts against Poisson churn arrivals; each ``ROUND_START`` first
-applies any due churn/replan, then runs one MAC mixing round — a
-packet-level TDM round (``mac.tdm_round``) or, with
-``cfg.mac_kind == "random_access"``, a slotted contention round
-(``mac_ra.ra_round``, planned by ``core.access_opt`` instead of
-Algorithm 2) — over the
-instantaneous channel (``fading.FadingChannel`` on the current
+applies any due churn/replan, then asks the scenario's ``SchedulingPolicy``
+(``sim.policy`` — packet-level TDM, slotted random access, or BASS-style
+sampled collision-free broadcast groups) to realize one mixing round over
+the instantaneous channel (``fading.FadingChannel`` on the current
 ``mobility`` positions) and emits a ``RoundRecord``. The clock advances
 through *simulated* seconds — airtime plus compute — so traces are
 accuracy-vs-simulated-wall-clock, the axis the paper's runtime claim lives
@@ -37,17 +35,13 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from ..core.access_opt import (solve_access, solve_access_joint,
-                               solve_access_joint_reference,
-                               solve_access_reference)
-from ..core.rate_opt import solve_joint, solve_joint_reference
 from ..core.topology import adjacency_from_rates, spectral_lambda
 from ..runtime.fault import ElasticController
 from .events import EventKind, EventQueue, SimClock
 from .fading import FadingChannel
-from .mac import RoundResult, mean_drift, tdm_round, tdm_round_reference
-from .mac_ra import ra_round
+from .mac import RoundResult, mean_drift
 from .mobility import PoissonChurn, make_mobility
+from .policy import PolicyRound, make_policy
 from .scenario import ScenarioConfig, get_scenario
 
 __all__ = ["RoundRecord", "SimTrace", "RoundContext", "WirelessSimulator",
@@ -180,6 +174,10 @@ class WirelessSimulator:
             n_nodes=cfg.n_nodes, lambda_target=cfg.lambda_target,
             mode="wireless", capacity=self._mean_capacity(),
             model_bits=self.wire_bits, solver_method=cfg.solver)
+        # who transmits each round, at what rates, in what slot structure:
+        # one policy instance per simulator (stateful policies — duty-cycle
+        # credits — reset with the run, keeping precompute/sweep replayable)
+        self.policy = make_policy(cfg)
         self.replans = -1           # initial plan is not a *re*-plan
         self.failures: list[tuple[int, int]] = []
         self._round = 0
@@ -206,39 +204,17 @@ class WirelessSimulator:
 
     # -- planning ------------------------------------------------------------
     def _replan(self):
-        """Re-run the MAC's planner on the current mean capacity of the live
-        node set: Algorithm 2 (via the elastic controller) for TDM, or the
-        ``access_opt`` (p, R) sweep for the random-access MAC (reference
-        path when ``cfg.solver`` names a ``*_reference`` method). The RA
-        plan always uses the conservative pure-collision surrogate — an
-        SINR capture threshold only makes realized rounds faster than
-        planned (see ``core.access_opt``)."""
+        """Re-run the scheduling policy's planner on the current mean
+        capacity of the live node set: Algorithm 2 (via the elastic
+        controller) or the joint rate x payload sweep for ``TDMPolicy``, the
+        ``access_opt`` (p, R) sweep for ``UniformRAPolicy``, or the
+        ``sched_opt`` accuracy-per-second (rates, fraction) sweep for the
+        BASS policies — reference planners when ``cfg.solver`` names a
+        ``*_reference`` method (see ``sim.policy``)."""
         m = self._mean_capacity()
         self.controller.capacity = m
-        joint = self.cfg.payload.mode == "auto"
-        reference = self.cfg.solver.endswith("_reference")
-        if self.cfg.mac_kind == "random_access":
-            if joint:
-                solver = (solve_access_joint_reference if reference
-                          else solve_access_joint)
-            else:
-                solver = solve_access_reference if reference else solve_access
-            self.solution = solver(
-                m, self.cfg.model_bits if joint else self.wire_bits,
-                self.cfg.lambda_target,
-                bandwidth_hz=self.cfg.bandwidth_hz,
-                interference_min_snr=self.cfg.ra.interference_min_snr)
-        elif joint:
-            # the controller's Algorithm 2 path minimizes a fixed wire size;
-            # the joint planner also picks the payload mode, so it replaces
-            # that call (same live-set mean capacity, same density target)
-            jsolve = solve_joint_reference if reference else solve_joint
-            self.solution = jsolve(m, self.cfg.model_bits,
-                                   self.cfg.lambda_target,
-                                   method=self.cfg.solver)
-        else:
-            self.solution = self.controller.replan()
-        if joint:
+        self.solution = self.policy.plan(m, self)
+        if self.cfg.payload.mode == "auto":
             self.payload_mode = self.solution.mode
             self.wire_bits = float(self.solution.wire_bits)
         self._plan_cap = m
@@ -286,28 +262,12 @@ class WirelessSimulator:
 
         pos_round = self._positions()
         self._cap_cache = None
-        if cfg.mac_kind == "random_access":
-            result = ra_round(
-                self.clock, self.solution.rates_bps, self.solution.p,
-                self._intended, self.wire_bits,
-                lambda t: self._capacity_at(pos_round, t), cfg.ra,
-                bandwidth_hz=cfg.bandwidth_hz, round_index=self._round,
-                seed=cfg.seed)
-        elif cfg.reference_mac:
-            result = tdm_round_reference(
-                self.clock, self.solution.rates_bps, self._intended,
-                self.wire_bits, lambda t: self._capacity_at(pos_round, t),
-                cfg.mac)
-        else:
-            result = tdm_round(
-                self.clock, self.solution.rates_bps, self._intended,
-                self.wire_bits, lambda t: self._capacity_at(pos_round, t),
-                cfg.mac,
-                block_index=self.channel.block_indices,
-                capacity_at_times=lambda ts: self.channel.capacity_at_times(
-                    pos_round, ts),
-                decode_ok_at_times=lambda ts, i, rate:
-                    self.channel.decode_ok_at_times(pos_round, ts, i, rate))
+        result = self.policy.run_round(PolicyRound(
+            clock=self.clock, solution=self.solution,
+            intended=self._intended, wire_bits=self.wire_bits,
+            capacity_at=lambda t: self._capacity_at(pos_round, t),
+            cfg=cfg, round_index=self._round, channel=self.channel,
+            positions=pos_round))
         w_eff = result.effective_w()
 
         metrics: dict = {}

@@ -1,6 +1,5 @@
 """Random-access MAC plane: contention semantics, (p, R) optimization,
-shared effective-W invariants, registry-wide runnability, and RA
-driver-vs-scan training parity.
+registry-wide runnability, and RA driver-vs-scan training parity.
 
 The load-bearing pins:
 
@@ -16,12 +15,10 @@ The load-bearing pins:
 import numpy as np
 import pytest
 
-from repro.core import access_opt, channel, rate_opt
-from repro.core.topology import adjacency_from_rates, paper_w
-from repro.sim import (EventKind, EventQueue, MacParams, RAParams, SimClock,
-                       WirelessSimulator, get_scenario, list_scenarios,
-                       precompute_trace, ra_round, tdm_round,
-                       tdm_round_reference)
+from repro.core import access_opt, channel
+from repro.sim import (EventKind, EventQueue, RAParams, SimClock,
+                       get_scenario, list_scenarios, precompute_trace,
+                       ra_round)
 from repro.sim.mac_ra import slot_duration_s
 
 BW = 20e6
@@ -201,68 +198,10 @@ def test_solve_access_p_on_grid_near_aloha_optimum():
     assert sol.p[0] == pytest.approx(1.0 / 6.0)
 
 
-# ---------------------------------------------------------------------------
-# Effective-W invariants shared by every MAC implementation
-# ---------------------------------------------------------------------------
-
-def _run_mac(kind: str, cap, rates, intended, model_bits):
-    clock = SimClock()
-    if kind == "tdm":
-        return tdm_round(clock, rates, intended, model_bits, lambda t: cap,
-                         MacParams())
-    if kind == "tdm_reference":
-        return tdm_round_reference(clock, rates, intended, model_bits,
-                                   lambda t: cap, MacParams())
-    return ra_round(clock, rates, np.full(rates.shape[0], 0.35), intended,
-                    model_bits, lambda t: cap, RAParams(max_slots=4096),
-                    bandwidth_hz=BW, seed=3)
-
-
-@pytest.mark.parametrize("kind", ["tdm", "tdm_reference", "ra"])
-@pytest.mark.parametrize("seed", [0, 1, 2])
-def test_effective_w_invariants_all_macs(kind, seed):
-    """Every MAC realizes a row-stochastic W whose self-weights can only
-    grow relative to the plan (delivery is a subset of intent), and with
-    zero outage/collision-loss probability realizes the plan's reception
-    W exactly."""
-    pos = channel.random_placement(5, 200.0, seed=seed)
-    cap = channel.capacity_matrix(pos,
-                                  channel.ChannelParams(path_loss_exp=4.0))
-    sol = rate_opt.solve(cap, 1e6, 0.8, method="greedy")
-    intended = adjacency_from_rates(cap, sol.rates_bps).astype(bool)
-    res = _run_mac(kind, cap, sol.rates_bps, intended, 1e6)
-    w = res.effective_w()
-    np.testing.assert_allclose(w.sum(axis=1), 1.0)
-    # plan reception W: Eq. 4 on "who can hear whom" of the planned rates
-    a_recv = adjacency_from_rates(cap, sol.rates_bps, reception_based=True)
-    w_plan = paper_w(a_recv)
-    assert (np.diag(w) >= np.diag(w_plan) - 1e-12).all()
-    # static channel + feasible plan (TDM) / coverage reached (RA, ample
-    # slot budget): zero loss probability => the realized W IS the plan W
-    assert res.outage_links == 0
-    np.testing.assert_allclose(w, w_plan)
-
-
-@pytest.mark.parametrize("kind", ["tdm", "tdm_reference", "ra"])
-def test_effective_w_invariants_under_losses(kind):
-    """Partial delivery keeps rows stochastic and never shrinks the
-    self-weight below the plan's."""
-    cap = _static_cap(n=4, d=60.0)
-    cap[0, 2] = cap[2, 0] = 1e5          # deep-fade link
-    rates = np.full(4, 1e6)
-    intended = np.ones((4, 4), dtype=bool)
-    if kind == "ra":
-        clock = SimClock()
-        res = ra_round(clock, rates, np.full(4, 0.5), intended, 1e6,
-                       lambda t: cap, RAParams(max_slots=6),
-                       bandwidth_hz=BW, seed=0)
-    else:
-        res = _run_mac(kind, cap, rates, intended, 1e6)
-    assert res.outage_links > 0
-    w = res.effective_w()
-    np.testing.assert_allclose(w.sum(axis=1), 1.0)
-    w_plan = paper_w(adjacency_from_rates(cap, rates, reception_based=True))
-    assert (np.diag(w) >= np.diag(w_plan) - 1e-12).all()
+# (the shared effective-W invariant suite — row-stochasticity, plan-W
+# exactness under zero loss, self-weight growth under losses — lives in
+# tests/test_policy.py, parametrized over EVERY round implementation: both
+# TDM loops, RA, and the BASS policies)
 
 
 # ---------------------------------------------------------------------------

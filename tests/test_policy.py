@@ -1,0 +1,415 @@
+"""Scheduling-policy plane: shared effective-W invariants across every
+round implementation, BASS round semantics, the accuracy-per-second
+planner's reference pin, trace determinism, and nested scenario overrides.
+
+The load-bearing pins:
+
+* ``solve_schedule`` (batched sweep) must equal ``solve_schedule_reference``
+  (the retained sequential loop) bit for bit — the acceptance criterion of
+  the scheduling plane, same contract as ``rate_opt``/``access_opt``.
+* every round implementation — both TDM loops, RA, and both BASS policies —
+  realizes a row-stochastic W, never shrinks self-weights below the plan's,
+  and under zero loss probability realizes the plan's reception W exactly
+  (the suite that replaces the per-MAC copies in ``test_mac_ra``).
+* precomputing a random-policy scenario twice is bit-identical, and
+  ``sweep`` over mixed-policy scenarios is order-independent.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import channel, rate_opt, sched_opt
+from repro.core.comm_model import tdm_time_s
+from repro.core.sched_opt import (collision_free_groups, group_airtime_s,
+                                  solve_schedule, solve_schedule_reference)
+from repro.core.topology import adjacency_from_rates, paper_w
+from repro.sim import (BASSParams, BASSPolicy, EnergyBASSPolicy, MacParams,
+                       QuantConfig, RAParams, SimClock, WirelessSimulator,
+                       bass_round, get_scenario, list_scenarios, make_policy,
+                       precompute_trace, ra_round, sweep, tdm_round,
+                       tdm_round_reference)
+from repro.core.access_opt import _in_range
+
+BW = 20e6
+
+ROUND_KINDS = ["tdm", "tdm_reference", "ra", "bass", "bass_energy"]
+
+
+def _static_cap(n=4, d=50.0):
+    pos = np.array([[d * (i % 2), d * (i // 2)] for i in range(n)], float)
+    return channel.capacity_matrix(
+        pos, channel.ChannelParams(path_loss_exp=3.5, bandwidth_hz=BW))
+
+
+def _run_round(kind: str, cap, rates, intended, model_bits, *,
+               eligible=None, tx_fraction=1.0, seed=3):
+    clock = SimClock()
+    n = rates.shape[0]
+    if kind == "tdm":
+        return tdm_round(clock, rates, intended, model_bits, lambda t: cap,
+                         MacParams())
+    if kind == "tdm_reference":
+        return tdm_round_reference(clock, rates, intended, model_bits,
+                                   lambda t: cap, MacParams())
+    if kind == "ra":
+        return ra_round(clock, rates, np.full(n, 0.35), intended,
+                        model_bits, lambda t: cap, RAParams(max_slots=4096),
+                        bandwidth_hz=BW, seed=seed)
+    # "bass" / "bass_energy": f = 1 airs every useful transmitter; the
+    # energy variant differs only by the eligibility mask threaded in
+    if kind == "bass_energy" and eligible is None:
+        eligible = np.ones(n, dtype=bool)     # round 0: full credits
+    return bass_round(clock, rates, intended, model_bits, lambda t: cap,
+                      BASSParams(), bandwidth_hz=BW,
+                      tx_fraction=tx_fraction, eligible=eligible,
+                      round_index=0, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Effective-W invariants shared by EVERY round implementation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ROUND_KINDS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_effective_w_invariants_all_rounds(kind, seed):
+    """Every round implementation realizes a row-stochastic W whose
+    self-weights can only grow relative to the plan (delivery is a subset
+    of intent), and with zero loss probability realizes the plan's
+    reception W exactly."""
+    pos = channel.random_placement(5, 200.0, seed=seed)
+    cap = channel.capacity_matrix(pos,
+                                  channel.ChannelParams(path_loss_exp=4.0))
+    sol = rate_opt.solve(cap, 1e6, 0.8, method="greedy")
+    intended = adjacency_from_rates(cap, sol.rates_bps).astype(bool)
+    res = _run_round(kind, cap, sol.rates_bps, intended, 1e6)
+    w = res.effective_w()
+    np.testing.assert_allclose(w.sum(axis=1), 1.0)
+    # plan reception W: Eq. 4 on "who can hear whom" of the planned rates
+    a_recv = adjacency_from_rates(cap, sol.rates_bps, reception_based=True)
+    w_plan = paper_w(a_recv)
+    assert (np.diag(w) >= np.diag(w_plan) - 1e-12).all()
+    # static channel, ample budget, f = 1: zero loss probability => the
+    # realized W IS the plan W (BASS groups are collision-free by
+    # construction, so nothing contends away)
+    assert res.outage_links == 0
+    np.testing.assert_allclose(w, w_plan)
+
+
+@pytest.mark.parametrize("kind", ROUND_KINDS)
+def test_effective_w_invariants_under_losses(kind):
+    """Partial delivery keeps rows stochastic and never shrinks the
+    self-weight below the plan's — dropped links shed exactly their mass."""
+    cap = _static_cap(n=4, d=60.0)
+    cap[0, 2] = cap[2, 0] = 1e5          # deep-fade link
+    rates = np.full(4, 1e6)
+    intended = np.ones((4, 4), dtype=bool)
+    if kind == "ra":
+        clock = SimClock()
+        res = ra_round(clock, rates, np.full(4, 0.5), intended, 1e6,
+                       lambda t: cap, RAParams(max_slots=6),
+                       bandwidth_hz=BW, seed=0)
+    else:
+        res = _run_round(kind, cap, rates, intended, 1e6)
+    assert res.outage_links > 0
+    w = res.effective_w()
+    np.testing.assert_allclose(w.sum(axis=1), 1.0)
+    w_plan = paper_w(adjacency_from_rates(cap, rates, reception_based=True))
+    assert (np.diag(w) >= np.diag(w_plan) - 1e-12).all()
+    # zero mass on the dropped links
+    dropped = intended & ~np.eye(4, dtype=bool) & ~res.delivered
+    assert (w.T[dropped] == 0.0).all()
+
+
+def test_effective_w_identity_rows_for_silent_nodes():
+    """A node that decodes nobody averages with nobody: its W row is the
+    identity row (the dead-row convention ``embed_w`` extends)."""
+    cap = _static_cap(n=4)
+    rates = np.array([1e6, 1e6, 1e6, 0.0])   # node 3 cannot transmit
+    intended = np.zeros((4, 4), dtype=bool)
+    intended[3, 0] = True                      # ...and nobody else targets 3
+    res = _run_round("bass", cap, rates, intended, 1e6)
+    w = res.effective_w()
+    np.testing.assert_allclose(w.sum(axis=1), 1.0)
+    for j in range(1, 4):                      # only node 0 was targeted
+        np.testing.assert_array_equal(w[j], np.eye(4)[j])
+
+
+# ---------------------------------------------------------------------------
+# BASS round semantics
+# ---------------------------------------------------------------------------
+
+def test_bass_groups_are_collision_free():
+    for seed in range(4):
+        pos = channel.random_placement(8, 400.0, seed=seed)
+        cap = channel.capacity_matrix(
+            pos, channel.ChannelParams(path_loss_exp=4.5, bandwidth_hz=BW))
+        sol = rate_opt.solve(cap, 1e6, 0.9, method="greedy")
+        intended = adjacency_from_rates(cap, sol.rates_bps).astype(bool)
+        np.fill_diagonal(intended, False)
+        in_range = _in_range(cap, BW, 1e-2)
+        groups = collision_free_groups(intended, in_range, range(8),
+                                       rates=sol.rates_bps)
+        recv = [np.flatnonzero(intended[i]) for i in range(8)]
+        seen = [i for g in groups for i in g]
+        assert len(seen) == len(set(seen))
+        for g in groups:
+            assert all(recv[i].size > 0 for i in g)
+            for i in g:
+                for m in g:
+                    if i == m:
+                        continue
+                    assert not intended[m, i] and not intended[i, m]
+                    assert not in_range[i, recv[m]].any()
+                    assert not in_range[m, recv[i]].any()
+
+
+def test_bass_full_activation_beats_eq3_via_spatial_reuse():
+    """Two far-apart pairs: BASS packs the non-interfering broadcasts into
+    shared slots, so the f = 1 round takes half of Eq. 3's serialized TDM
+    airtime — and never more than Eq. 3 on any topology."""
+    pos = np.array([[0.0, 0.0], [30.0, 0.0],
+                    [5000.0, 0.0], [5030.0, 0.0]])
+    cap = channel.capacity_matrix(
+        pos, channel.ChannelParams(path_loss_exp=3.5, bandwidth_hz=BW))
+    rates = np.full(4, 1e6)
+    intended = adjacency_from_rates(cap, rates).astype(bool)
+    # links exist inside each pair only (the 5 km gap kills cross links)
+    assert intended[0, 1] and intended[2, 3]
+    assert not intended[0, 2] and not intended[1, 3]
+    res = _run_round("bass", cap, rates, intended, 1e6)
+    t_tdm = tdm_time_s(1e6, rates)
+    assert res.duration_s == pytest.approx(2 * 1e6 / 1e6)   # 2 shared slots
+    assert res.duration_s <= t_tdm / 1.9
+    assert res.outage_links == 0
+    # dense topology: no reuse possible, grouped airtime == Eq. 3
+    cap_d = _static_cap(n=4, d=40.0)
+    intended_d = np.ones((4, 4), dtype=bool)
+    np.fill_diagonal(intended_d, False)
+    groups = collision_free_groups(intended_d, _in_range(cap_d, BW, 1e-2),
+                                   range(4), rates=rates)
+    assert all(len(g) == 1 for g in groups)
+    assert group_airtime_s(1e6, rates, groups) == pytest.approx(
+        tdm_time_s(1e6, rates))
+
+
+def test_bass_sampling_is_deterministic_and_round_varying():
+    cap = _static_cap(n=6, d=45.0)
+    rates = np.full(6, 1e6)
+    intended = np.ones((6, 6), dtype=bool)
+
+    def run(round_index, seed=7):
+        clock = SimClock()
+        return bass_round(clock, rates, intended, 1e6, lambda t: cap,
+                          BASSParams(), bandwidth_hz=BW, tx_fraction=0.34,
+                          round_index=round_index, seed=seed)
+
+    a, b = run(0), run(0)
+    np.testing.assert_array_equal(a.delivered, b.delivered)
+    assert a.duration_s == b.duration_s
+    # the sampled subgraph varies across rounds (f < 1 => random per-round W)
+    distinct = {run(r).delivered.tobytes() for r in range(8)}
+    assert len(distinct) >= 2
+
+
+def test_bass_duty_cycle_caps_transmissions():
+    cfg = get_scenario("bass_energy", solver="greedy",
+                       compute_s_per_round=0.01)
+    assert cfg.bass.duty_cycle == 0.5
+    sim = WirelessSimulator(cfg)
+    assert isinstance(sim.policy, EnergyBASSPolicy)
+    n_rounds = 12
+    sim.run(n_rounds)
+    counts = sim.policy._tx_count
+    assert sim.policy._rounds == n_rounds
+    assert counts.sum() > 0
+    # the credit rule admits node i in round r only while
+    # count_i < duty * (r + 1), so no node exceeds duty * R (+1 for the
+    # admitting round itself)
+    assert counts.max() <= 0.5 * n_rounds + 1
+
+
+def test_make_policy_resolves_kinds():
+    assert make_policy(get_scenario("static")).kind == "tdm"
+    assert make_policy(get_scenario("ra_fading")).kind == "uniform_ra"
+    p = make_policy(get_scenario("bass_static"))
+    assert isinstance(p, BASSPolicy) and not isinstance(p, EnergyBASSPolicy)
+    assert isinstance(make_policy(get_scenario("bass_energy")),
+                      EnergyBASSPolicy)
+    # explicit policy overrides the mac_kind-derived default
+    assert make_policy(get_scenario("static", policy="bass")).kind == "bass"
+
+
+# ---------------------------------------------------------------------------
+# sched_opt: batched == pinned sequential reference (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,eps,duty,fracs", [
+    (0, 5.0, 1.0, None),
+    (1, 3.5, 1.0, None),
+    (2, 4.0, 0.5, None),
+    (3, 5.0, 1.0, (0.2, 0.6, 1.0)),
+    (4, 3.0, 0.3, (0.5, 1.0)),
+])
+def test_solve_schedule_bit_identical_to_reference(seed, eps, duty, fracs):
+    n = 4 + seed % 3
+    pos = channel.random_placement(n, 200.0, seed=seed)
+    cap = channel.capacity_matrix(pos,
+                                  channel.ChannelParams(path_loss_exp=eps))
+    fr = None if fracs is None else np.asarray(fracs)
+    a = solve_schedule(cap, 1e6, fractions=fr, duty_cycle=duty)
+    b = solve_schedule_reference(cap, 1e6, fractions=fr, duty_cycle=duty)
+    np.testing.assert_array_equal(a.rates_bps, b.rates_bps)
+    assert a.tx_fraction == b.tx_fraction
+    assert a.lam == b.lam and a.lam_full == b.lam_full
+    assert a.rate_factor == b.rate_factor
+    assert a.slots == b.slots
+    assert a.t_full_s == b.t_full_s and a.t_round_s == b.t_round_s
+    assert a.t_tdm_s == b.t_tdm_s
+    assert a.score_s == b.score_s
+    assert a.feasible == b.feasible
+    np.testing.assert_array_equal(a.w, b.w)
+
+
+def test_solve_schedule_objective_sane():
+    cap = _static_cap(n=5, d=40.0)
+    sol = solve_schedule(cap, 1e6)
+    assert sol.feasible and 0.0 <= sol.lam < 1.0
+    assert sol.rate_factor == pytest.approx(1.0 / (1.0 - sol.lam))
+    assert sol.t_round_s == pytest.approx(sol.tx_fraction * sol.t_full_s)
+    assert sol.score_s == pytest.approx(sol.rate_factor * sol.t_round_s)
+    # grouped full activation never exceeds Eq. 3 serialization
+    assert sol.t_full_s <= sol.t_tdm_s + 1e-12
+    # expected W row-stochastic, thinner than the full plan
+    np.testing.assert_allclose(sol.w.sum(axis=1), 1.0)
+    assert sol.lam >= sol.lam_full - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Determinism: precompute twice, sweep order-independence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["bass_fading", "bass_energy"])
+def test_precompute_twice_is_bit_identical(name):
+    cfg = get_scenario(name, solver="greedy", compute_s_per_round=0.01)
+    a = precompute_trace(cfg, 6)
+    b = precompute_trace(cfg, 6)
+    np.testing.assert_array_equal(a.w_eff, b.w_eff)
+    np.testing.assert_array_equal(a.live, b.live)
+    np.testing.assert_array_equal(a.t_start_s, b.t_start_s)
+    np.testing.assert_array_equal(a.t_comm_s, b.t_comm_s)
+    np.testing.assert_array_equal(a.t_end_s, b.t_end_s)
+    np.testing.assert_array_equal(a.wire_bits, b.wire_bits)
+
+
+def test_bass_fading_samples_random_per_round_w():
+    tr = precompute_trace("bass_fading", 6, solver="greedy",
+                          compute_s_per_round=0.01)
+    distinct = len({tr.w_eff[r].tobytes() for r in range(tr.n_rounds)})
+    assert distinct >= 2
+
+
+def test_sweep_is_order_independent_across_policies():
+    names = ["bass_fading", "ra_fading", "fading"]
+    cfgs = [get_scenario(n, solver="greedy", compute_s_per_round=0.01)
+            for n in names]
+    fwd = sweep(cfgs, 4)
+    rev = sweep(list(reversed(cfgs)), 4)
+    by_name_fwd = {t.scenario: t for t in fwd}
+    by_name_rev = {t.scenario: t for t in rev}
+    assert set(by_name_fwd) == set(names)
+    for n in names:
+        ta, tb = by_name_fwd[n], by_name_rev[n]
+        assert [r.t_comm_s for r in ta.records] == \
+            [r.t_comm_s for r in tb.records]
+        assert [r.lam_effective for r in ta.records] == \
+            [r.lam_effective for r in tb.records]
+        assert ta.t_end_s == tb.t_end_s
+
+
+# ---------------------------------------------------------------------------
+# Nested scenario overrides (dotted keys / sub-dict merge)
+# ---------------------------------------------------------------------------
+
+def test_nested_override_dotted_key():
+    cfg = get_scenario("ra_fading", **{"ra.max_slots": 7})
+    assert cfg.ra.max_slots == 7
+    # untouched siblings keep the registered values
+    base = get_scenario("ra_fading")
+    assert cfg.ra.interference_min_snr == base.ra.interference_min_snr
+    assert cfg.ra.capture_db == base.ra.capture_db
+    assert base.ra.max_slots == 24           # the registry entry is untouched
+
+
+def test_nested_override_dict_merge():
+    cfg = get_scenario("fading", mac={"max_retx_rounds": 9})
+    assert cfg.mac.max_retx_rounds == 9
+    cfg = get_scenario("compressed_int8", **{"payload.error_feedback": False})
+    assert cfg.payload.mode == "int8" and not cfg.payload.error_feedback
+    cfg = get_scenario("bass_static", **{"bass.duty_cycle": 0.25},
+                       solver="greedy")
+    assert cfg.bass.duty_cycle == 0.25 and cfg.solver == "greedy"
+    assert isinstance(make_policy(cfg), EnergyBASSPolicy)
+
+
+def test_nested_override_errors():
+    with pytest.raises((TypeError, ValueError)):
+        get_scenario("static", **{"ra.no_such_field": 1})
+    with pytest.raises(ValueError, match="not a param dataclass"):
+        get_scenario("static", **{"seed.x": 1})
+    with pytest.raises(ValueError, match="conflicting"):
+        get_scenario("static", ra=RAParams(max_slots=8),
+                     **{"ra.max_slots": 9})
+    # replace() on a config object takes the same forms as get_scenario
+    cfg = get_scenario("ra_static").replace(**{"ra.max_slots": 5})
+    assert cfg.ra.max_slots == 5
+
+
+def test_nested_override_through_precompute_trace():
+    tr = precompute_trace("ra_fading", 3, solver="greedy",
+                          compute_s_per_round=0.01,
+                          **{"ra.max_slots": 6})
+    assert tr.cfg.ra.max_slots == 6 and tr.n_rounds == 3
+
+
+# ---------------------------------------------------------------------------
+# Registry / config validation
+# ---------------------------------------------------------------------------
+
+def test_bass_scenarios_registered_and_validated():
+    names = list_scenarios()
+    for required in ("bass_static", "bass_fading", "bass_energy"):
+        assert required in names
+    assert get_scenario("bass_fading").resolved_policy() == "bass"
+    assert get_scenario("static").resolved_policy() == "tdm"
+    assert get_scenario("ra_static").resolved_policy() == "uniform_ra"
+    with pytest.raises(ValueError, match="policy"):
+        get_scenario("static", policy="csma")
+    # BASS plans rates and fractions; the joint payload sweep is not wired
+    with pytest.raises(ValueError, match="payload.mode"):
+        get_scenario("bass_static", payload=QuantConfig(mode="auto"))
+    # no pinned-loop BASS round exists
+    with pytest.raises(ValueError, match="reference_mac"):
+        get_scenario("bass_static", reference_mac=True)
+    with pytest.raises(ValueError, match="duty_cycle"):
+        BASSParams(duty_cycle=0.0)
+    with pytest.raises(ValueError, match="weight"):
+        BASSParams(weight="random")
+
+
+def test_bass_reference_solver_runs_through_simulator():
+    cfg = get_scenario("bass_static", solver="greedy_reference",
+                       compute_s_per_round=0.01)
+    tr = precompute_trace(cfg, 2)
+    fast = precompute_trace(get_scenario("bass_static", solver="greedy",
+                                         compute_s_per_round=0.01), 2)
+    # the pinned reference planner picks the identical schedule
+    np.testing.assert_array_equal(tr.w_eff, fast.w_eff)
+    np.testing.assert_array_equal(tr.t_comm_s, fast.t_comm_s)
+
+
+def test_scenario_config_stays_frozen_hashable():
+    cfg = get_scenario("bass_energy")
+    hash(cfg)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.policy = "tdm"
