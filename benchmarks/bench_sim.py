@@ -27,6 +27,11 @@ Measures (median + min over several runs each):
   call. Reports per-policy communication time, final accuracy, and
   **time-to-accuracy** (first simulated second reaching the best accuracy
   every policy attains) — the objective ``core.sched_opt`` optimizes.
+* ``fault_compare`` — graceful degradation on the bursty-blackout world
+  (``fault_burst``): fault-free baseline vs renorm degradation + watchdog
+  vs naive W-degradation, one call per mode. The ``checks.fault`` gate pins
+  renorm+watchdog within tolerance of the fault-free final accuracy while
+  naive (rows leak mass on every lost link) measurably degrades.
 
 Cross-checks (``checks`` in the JSON, process exits 1 on any failure):
 
@@ -371,6 +376,73 @@ def bench_policy_compare(quick: bool) -> dict:
     return result
 
 
+def bench_fault_compare(quick: bool) -> dict:
+    """Graceful degradation under injected faults, head to head on the SAME
+    bursty-blackout world (``fault_burst``): the fault-free baseline
+    (faults stripped) vs renorm degradation + watchdog vs naive degradation.
+    The gate (``checks.fault``): renorm+watchdog holds final accuracy within
+    ``renorm_tol`` of fault-free, while naive W-degradation measurably
+    degrades — the silent mass-leak failure mode the degrade switch exists
+    to expose."""
+    import time as _time
+
+    from repro.sim import train_cnn_on_traces
+
+    n_train = 300 if quick else 1200
+    cfgs = {
+        "fault_free": get_scenario("fault_burst", eval_every_rounds=2,
+                                   faults=None),
+        "renorm_watchdog": get_scenario("fault_burst", eval_every_rounds=2,
+                                        watchdog=True),
+        "naive": get_scenario("fault_burst", eval_every_rounds=2,
+                              degrade="naive"),
+    }
+    t0 = _time.perf_counter()
+    result: dict = {"modes": {}}
+    for label, cfg in cfgs.items():
+        # one call per mode: degrade/watchdog change the scan executable,
+        # so the modes cannot share a vmapped family
+        traces, out = train_cnn_on_traces([cfg], epochs=1, n_train=n_train,
+                                          n_test=150)
+        s = traces.traces[0].trace.summary()
+        rb = out["rollbacks"]
+        result["modes"][label] = {
+            "scenario": cfg.name,
+            "degrade": cfg.degrade,
+            "watchdog": cfg.watchdog,
+            "comm_s": s["total_comm_s"],
+            "outage_rate": s["outage_rate"],
+            "blackout_link_rounds": s["blackout_link_rounds"],
+            "down_node_rounds": s["down_node_rounds"],
+            "plan_fallback_rounds": s["plan_fallback_rounds"],
+            "watchdog_rollbacks": (int(rb.sum()) if rb is not None else 0),
+            "final_acc": float(out["acc"][0, -1]),
+            "curve": [[float(t), float(a)] for t, a in out["curves"][0]],
+        }
+    result["t_wall_s"] = _time.perf_counter() - t0
+    return result
+
+
+def check_fault(fault_compare: dict, quick: bool) -> dict:
+    """Gate on ``bench_fault_compare``: renorm+watchdog within tolerance of
+    the fault-free accuracy, naive measurably below renorm. Quick mode
+    trains on a sliver of data, so its tolerances are looser."""
+    acc_free = fault_compare["modes"]["fault_free"]["final_acc"]
+    acc_renorm = fault_compare["modes"]["renorm_watchdog"]["final_acc"]
+    acc_naive = fault_compare["modes"]["naive"]["final_acc"]
+    renorm_tol = 0.10 if quick else 0.05
+    naive_margin = 0.02
+    return {
+        "acc_fault_free": acc_free,
+        "acc_renorm_watchdog": acc_renorm,
+        "acc_naive": acc_naive,
+        "renorm_tol": renorm_tol,
+        "naive_margin": naive_margin,
+        "renorm_holds_accuracy": bool(acc_renorm >= acc_free - renorm_tol),
+        "naive_degrades": bool(acc_naive <= acc_renorm - naive_margin),
+    }
+
+
 def check_sched(quick: bool) -> dict:
     """Batched (rates x fraction) accuracy-per-second sweep vs its pinned
     sequential reference — bit-identical over random placements, fraction
@@ -433,6 +505,7 @@ def main(argv=None) -> int:
         "mac_compare": bench_mac_compare(args.quick),
         "compression_compare": bench_compression_compare(args.quick),
         "policy_compare": bench_policy_compare(args.quick),
+        "fault_compare": bench_fault_compare(args.quick),
         "checks": {
             "solver": check_solvers(args.quick),
             "access": check_access(args.quick),
@@ -441,6 +514,8 @@ def main(argv=None) -> int:
             "mac": check_mac(4 if args.quick else 8),
         },
     }
+    result["checks"]["fault"] = check_fault(result["fault_compare"],
+                                            args.quick)
     checks = result["checks"]
     failed = (not result["solver"]["match"]
               or not all(checks["solver"].values())
@@ -450,6 +525,8 @@ def main(argv=None) -> int:
               or not all(checks["sched"].values())
               or not result["policy_compare"]["bass_beats_tdm_and_ra"]
               or not all(v for k, v in checks["mac"].items()
+                         if isinstance(v, bool))
+              or not all(v for k, v in checks["fault"].items()
                          if isinstance(v, bool)))
     result["ok"] = not failed
 

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["DPSGDConfig", "replicate", "mix", "dpsgd_step", "make_dpsgd_step",
-           "dpsgd_masked_step", "dpsgd_masked_compressed_step",
+           "dpsgd_masked_step", "make_dpsgd_masked_step",
+           "dpsgd_masked_compressed_step",
            "make_dpsgd_compressed_step", "embed_w", "zero_residuals"]
 
 PyTree = Any
@@ -302,6 +303,21 @@ def make_dpsgd_step(
     """Bind loss_fn/config once; returns jitted (params, batches, W) -> step."""
     def step(node_params, node_batches, w):
         return dpsgd_step(loss_fn, node_params, node_batches, w, config)
+    return step
+
+
+def make_dpsgd_masked_step(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    config: DPSGDConfig = DPSGDConfig(),
+):
+    """Bind loss_fn/config once; returns one jitted
+    ``(params, batches, w, live) -> (params, losses)`` — the per-round-driver
+    entry to ``dpsgd_masked_step`` (crashed/churned nodes take no gradient
+    step; their ``embed_w``-contract identity rows carry stale params)."""
+    @jax.jit
+    def step(node_params, node_batches, w, live):
+        return dpsgd_masked_step(loss_fn, node_params, node_batches, w, live,
+                                 config)
     return step
 
 

@@ -21,7 +21,7 @@ import numpy as np
 
 from ..core.bound import BoundParams, dpsgd_bound
 
-__all__ = ["StragglerPolicy", "straggler_penalty"]
+__all__ = ["StragglerPolicy", "ring_neighbors", "straggler_penalty"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,18 +51,38 @@ class StragglerPolicy:
         return best
 
 
+def ring_neighbors(n: int, degree: int) -> np.ndarray:
+    """(n, k + 1) index array: each node plus its ``k = min(degree, n - 1)``
+    distinct ring neighbors, nearest first (offsets +1, -1, +2, -2, ... mod
+    n, deduplicated — so odd degrees take one extra neighbor on the +side
+    instead of double-counting an offset, and degree >= n saturates at the
+    full ring)."""
+    if n < 1:
+        raise ValueError("n must be >= 1")
+    if degree < 0:
+        raise ValueError("degree must be >= 0")
+    k = min(degree, n - 1)
+    offsets: list[int] = [0]
+    s = 1
+    while len(offsets) < k + 1:
+        for cand in (s % n, (-s) % n):
+            if len(offsets) < k + 1 and cand not in offsets:
+                offsets.append(cand)
+        s += 1
+    idx = np.arange(n)
+    return (idx[:, None] + np.asarray(offsets, dtype=np.int64)[None, :]) % n
+
+
 def straggler_penalty(degree: int, n: int, slow_prob: float,
                       slow_factor: float, trials: int = 2000,
                       seed: int = 0) -> tuple[float, float]:
     """(gossip_delay, allreduce_delay) expected per-step time units when each
     node independently runs ``slow_factor``x slower with prob ``slow_prob``.
-    Gossip waits for the max over each node's (self + degree neighbors);
+    Gossip waits for the max over each node's (self + ``ring_neighbors``);
     all-reduce waits for the global max. Returned values are fleet means."""
     rng = np.random.default_rng(seed)
     times = np.where(rng.random((trials, n)) < slow_prob, slow_factor, 1.0)
     allreduce = times.max(axis=1).mean()
-    idx = np.arange(n)
-    neigh = [np.stack([(idx + s) % n for s in range(-degree // 2, degree // 2 + 1)])
-             .T for _ in range(1)][0]
+    neigh = ring_neighbors(n, degree)
     gossip = times[:, neigh].max(axis=2).mean()
     return float(gossip), float(allreduce)

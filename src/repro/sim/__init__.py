@@ -13,6 +13,9 @@ Modules:
 
 * ``events``   — deterministic event queue + simulated clock
 * ``fading``   — Rayleigh/shadowing ``C_ij(t)`` over ``core.channel``
+* ``faults``   — deterministic fault injection: Gilbert-Elliott link
+  blackouts, correlated crash/recover, stragglers, stale planner inputs
+  (the ``fault_*`` scenarios; recovery loop lives in ``runtime.fault``)
 * ``mac``      — packet-level TDM broadcast, outage, retransmission
 * ``mac_ra``   — slotted random-access broadcast: contention, collisions,
   SINR capture, slots-until-coverage airtime (planned by
@@ -32,8 +35,9 @@ from ..core.compression import QuantConfig
 from .batch import train_cnn_on_traces, train_on_trace, train_on_traces
 from .events import Event, EventKind, EventQueue, SimClock
 from .fading import FadingChannel, FadingParams
-from .mac import (MacParams, RoundResult, mean_drift, tdm_round,
-                  tdm_round_reference)
+from .faults import FaultParams, FaultSchedule, RoundFaults
+from .mac import (DEGRADE_MODES, MacParams, RoundResult, mean_drift,
+                  tdm_round, tdm_round_reference)
 from .mac_ra import RAParams, ra_round
 from .mobility import (ClusterMobility, PoissonChurn, RandomWaypoint,
                        StaticMobility, make_mobility)
@@ -51,7 +55,8 @@ __all__ = [
     "QuantConfig",
     "Event", "EventKind", "EventQueue", "SimClock",
     "FadingChannel", "FadingParams",
-    "MacParams", "RoundResult", "mean_drift", "tdm_round",
+    "FaultParams", "FaultSchedule", "RoundFaults",
+    "DEGRADE_MODES", "MacParams", "RoundResult", "mean_drift", "tdm_round",
     "tdm_round_reference",
     "RAParams", "ra_round",
     "ClusterMobility", "PoissonChurn", "RandomWaypoint", "StaticMobility",

@@ -48,9 +48,26 @@ PyTree = Any
 _NO_PAYLOAD = QuantConfig(mode="none")
 
 
+def _nonfinite_rows(node_params: PyTree) -> jax.Array:
+    """(n,) bool: nodes whose parameters contain any NaN/inf leaf entry."""
+    leaves = jax.tree.leaves(node_params)
+    bad = jnp.zeros(leaves[0].shape[0], dtype=bool)
+    for p in leaves:
+        bad = bad | jnp.any(~jnp.isfinite(p.reshape(p.shape[0], -1)), axis=1)
+    return bad
+
+
+def _row_where(mask: jax.Array, a: PyTree, b: PyTree) -> PyTree:
+    """Per-leaf ``where`` on the leading node axis."""
+    def _sel(x, y):
+        m = mask.reshape(mask.shape[0], *([1] * (x.ndim - 1)))
+        return jnp.where(m, x, y)
+    return jax.tree.map(_sel, a, b)
+
+
 @partial(jax.jit,
          static_argnames=("loss_fn", "config", "collect_node0", "unroll",
-                          "payload"))
+                          "payload", "watchdog"))
 def train_on_trace(
     loss_fn: Callable[[PyTree, PyTree], Any],
     node_params: PyTree,
@@ -61,6 +78,8 @@ def train_on_trace(
     collect_node0: bool = False,
     unroll: int | bool = True,
     payload: QuantConfig = _NO_PAYLOAD,
+    active_seq=None,
+    watchdog: bool = False,
 ):
     """Train over one precomputed trace in a single ``lax.scan``.
 
@@ -87,6 +106,19 @@ def train_on_trace(
     scan carries per-node error-feedback residuals (zero-initialized, masked
     for dead nodes) alongside the parameters; ``mode="none"`` (the default)
     runs the exact ``dpsgd_masked_step`` body unchanged.
+
+    ``active_seq`` (rounds, n), when given, is the gradient mask instead of
+    ``live_seq`` — the fault plane's "live but crashed this round" nodes
+    keep stale parameters (identity W rows) without taking a local step,
+    while ``live_seq`` still decides whose parameters the ``collect_node0``
+    snapshot tracks (the first *churn*-live node, matching the per-round
+    driver's row 0 regardless of transient crashes).
+
+    ``watchdog`` arms a per-node convergence guard inside the scan: after
+    each round, any node whose parameters picked up a NaN/inf rolls back to
+    its last finite snapshot (error-feedback residuals reset to zero on
+    rollback so poisoned quantization error cannot re-infect it). Returns
+    one extra (rounds, n) bool array of rollback events as the last output.
     """
     if payload.mode == "auto":
         raise ValueError(
@@ -96,31 +128,52 @@ def train_on_trace(
     compressed = payload.mode != "none"
 
     def body(carry, xs):
-        w, live, batch = xs
+        w, live, active, batch = xs
+        if watchdog:
+            inner, good = carry
+        else:
+            inner = carry
         if compressed:
-            params, res = carry
+            params, res = inner
             new_params, new_res, losses = dpsgd_masked_compressed_step(
-                loss_fn, params, batch, w, live, res, payload, config)
-            new_carry = (new_params, new_res)
+                loss_fn, params, batch, w, active, res, payload, config)
         else:
             new_params, losses = dpsgd_masked_step(
-                loss_fn, carry, batch, w, live, config)
-            new_carry = new_params
+                loss_fn, inner, batch, w, active, config)
+            new_res = None
+        if watchdog:
+            bad = _nonfinite_rows(new_params)
+            new_params = _row_where(bad, good, new_params)
+            if compressed:
+                new_res = _row_where(bad, zero_residuals(new_res), new_res)
+            good = new_params
+        new_carry = (new_params, new_res) if compressed else new_params
+        if watchdog:
+            new_carry = (new_carry, good)
+        outs = (losses,)
         if collect_node0:
             first = jnp.argmax(live)        # first live row (original-id order)
-            snap = jax.tree.map(lambda p: p[first], new_params)
-            return new_carry, (losses, snap)
-        return new_carry, (losses,)
+            outs = outs + (jax.tree.map(lambda p: p[first], new_params),)
+        if watchdog:
+            outs = outs + (bad,)
+        return new_carry, outs
 
+    # crashed-but-alive nodes (fault plane) skip their gradient; without a
+    # fault plane the two masks coincide
+    grad_mask = live_seq if active_seq is None else active_seq
     carry0 = ((node_params, zero_residuals(node_params)) if compressed
               else node_params)
+    if watchdog:
+        carry0 = (carry0, node_params)
     final, outs = jax.lax.scan(body, carry0,
-                               (w_seq, live_seq, batch_seq), unroll=unroll)
+                               (w_seq, live_seq, grad_mask, batch_seq),
+                               unroll=unroll)
+    if watchdog:
+        final = final[0]
     if compressed:
         final = final[0]
-    if collect_node0:
-        return final, outs[0], outs[1]
-    return final, outs[0]
+    # (final, losses[, node0_snaps][, rollbacks]) — extras in that order
+    return (final,) + tuple(outs)
 
 
 def train_on_traces(
@@ -134,6 +187,8 @@ def train_on_traces(
     params_batched: bool = False,
     unroll: int | bool = True,
     payload: QuantConfig = _NO_PAYLOAD,
+    active_seq=None,
+    watchdog: bool = False,
 ):
     """``train_on_trace`` vmapped over a leading Monte-Carlo axis.
 
@@ -142,12 +197,23 @@ def train_on_traces(
     inits); otherwise one init is shared by every trace. One compiled call
     produces the whole (S,)-family of loss/parameter trajectories.
     """
-    def one(p, w, live, b):
-        return train_on_trace(loss_fn, p, w, live, b, config, collect_node0,
-                              unroll, payload)
+    if active_seq is None:
+        def one(p, w, live, b):
+            return train_on_trace(loss_fn, p, w, live, b, config,
+                                  collect_node0, unroll, payload,
+                                  watchdog=watchdog)
+        axes = (0 if params_batched else None, 0, 0, 0)
+        return jax.vmap(one, in_axes=axes)(
+            node_params, w_seq, live_seq, batch_seq)
 
-    return jax.vmap(one, in_axes=(0 if params_batched else None, 0, 0, 0))(
-        node_params, w_seq, live_seq, batch_seq)
+    def one(p, w, live, act, b):
+        return train_on_trace(loss_fn, p, w, live, b, config, collect_node0,
+                              unroll, payload, active_seq=act,
+                              watchdog=watchdog)
+
+    axes = (0 if params_batched else None, 0, 0, 0, 0)
+    return jax.vmap(one, in_axes=axes)(
+        node_params, w_seq, live_seq, active_seq, batch_seq)
 
 
 def _driver_batches(cfg: ScenarioConfig, tr: TrainTrace, shard_x: np.ndarray,
@@ -218,6 +284,7 @@ def train_cnn_on_traces(
     n_nodes = cfgs[0].n_nodes
     eval_every = cfgs[0].eval_every_rounds
     payload = cfgs[0].payload
+    watchdog = cfgs[0].watchdog
     for c in cfgs:
         if c.n_nodes != n_nodes or c.eval_every_rounds != eval_every:
             raise ValueError("configs must share n_nodes/eval_every_rounds")
@@ -225,6 +292,9 @@ def train_cnn_on_traces(
             # one scan executable serves the whole family; the quantization
             # mode is baked into it, so mixed-payload families must split
             raise ValueError("configs must share the payload QuantConfig")
+        if c.watchdog != watchdog:
+            # like payload: the rollback guard changes the scan body
+            raise ValueError("configs must share the watchdog setting")
     cfgs = [c if abs(c.model_bits - cnn.MODEL_BITS) <= 0.5
             else c.replace(model_bits=float(cnn.MODEL_BITS)) for c in cfgs]
 
@@ -261,11 +331,17 @@ def train_cnn_on_traces(
                for c in cfgs]
     params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *params0)
 
-    finals, losses, snaps = train_on_traces(
+    out_arrays = train_on_traces(
         _cnn_loss, params0,
         jnp.asarray(traces.w_eff), jnp.asarray(traces.live), batches,
         DPSGDConfig(eta=eta), collect_node0=True, params_batched=True,
-        unroll=unroll, payload=payload)
+        unroll=unroll, payload=payload,
+        active_seq=jnp.asarray(traces.active), watchdog=watchdog)
+    if watchdog:
+        finals, losses, snaps, rollbacks = out_arrays
+    else:
+        finals, losses, snaps = out_arrays
+        rollbacks = None
 
     live = traces.live                                    # (S, rounds, n)
     raw = np.asarray(losses, dtype=np.float64)            # (S, rounds, n)
@@ -298,4 +374,7 @@ def train_cnn_on_traces(
         "eval_rounds": eval_rounds,
         "curves": curves,
         "final_params": final_params,
+        # (S, rounds, n) bool watchdog rollback events, None when disarmed
+        "rollbacks": (np.asarray(rollbacks) if rollbacks is not None
+                      else None),
     }

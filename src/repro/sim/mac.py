@@ -39,8 +39,17 @@ import numpy as np
 from ..core.topology import paper_w
 from .events import EventKind, EventQueue, SimClock
 
-__all__ = ["MacParams", "RoundResult", "mean_drift", "tdm_round",
-           "tdm_round_reference"]
+__all__ = ["MacParams", "RoundResult", "DEGRADE_MODES", "mean_drift",
+           "tdm_round", "tdm_round_reference"]
+
+# how a round turns its delivered adjacency into the applied mixing matrix
+# when links the plan counted on are missing (outage, blackout, crash):
+#   "renorm" — Eq. 4 on the *delivered* graph: lost mass returns to the
+#              surviving links' weights (rows stay stochastic; graceful).
+#   "naive"  — the *planned* Eq. 4 weights with lost links zeroed: rows sum
+#              to < 1, so every lost link shrinks the receiver's parameters
+#              toward zero (the silent failure mode the bench pins).
+DEGRADE_MODES = ("renorm", "naive")
 
 
 def mean_drift(w: np.ndarray) -> float:
@@ -86,13 +95,24 @@ class RoundResult:
         return 1.0 if n_int == 0 else float(
             (self.delivered & self.intended).sum() / n_int)
 
-    def effective_w(self) -> np.ndarray:
-        """Row-stochastic mixing matrix actually realized this round: node j
-        averages itself plus every i whose broadcast it fully decoded
-        (Eq. 4 applied to the *delivered* adjacency)."""
+    def effective_w(self, degrade: str = "renorm") -> np.ndarray:
+        """Mixing matrix actually realized this round. ``degrade="renorm"``
+        (the default, row-stochastic): node j averages itself plus every i
+        whose broadcast it fully decoded — Eq. 4 applied to the *delivered*
+        adjacency, so weight lost to outage returns to the surviving links.
+        ``degrade="naive"``: the *planned* Eq. 4 weights with undelivered
+        links zeroed — rows sum to < 1 whenever a link is lost, silently
+        shrinking the mix toward zero (see ``DEGRADE_MODES``)."""
         a = self.delivered.T.astype(np.float64)  # a[j, i] = j received i
         np.fill_diagonal(a, 1.0)
-        return paper_w(a)
+        if degrade == "renorm":
+            return paper_w(a)
+        if degrade == "naive":
+            planned = self.intended.T.astype(np.float64)
+            np.fill_diagonal(planned, 1.0)
+            return paper_w(planned) * a
+        raise ValueError(
+            f"degrade must be one of {DEGRADE_MODES}, got {degrade!r}")
 
     def mean_drift(self) -> float:
         """``mean_drift`` of this round's realized mixing matrix."""

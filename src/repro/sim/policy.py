@@ -40,12 +40,14 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from ..core.access_opt import (_in_range, solve_access, solve_access_joint,
+from ..core.access_opt import (AccessSolution, _in_range, solve_access,
+                               solve_access_joint,
                                solve_access_joint_reference,
                                solve_access_reference)
 from ..core.rate_opt import solve_joint, solve_joint_reference
-from ..core.sched_opt import (collision_free_groups, solve_schedule,
-                              solve_schedule_reference)
+from ..core.sched_opt import (ScheduleSolution, collision_free_groups,
+                              solve_schedule, solve_schedule_reference)
+from ..runtime.fault import fallback_plan
 from .events import EventKind, EventQueue
 from .mac import RoundResult, _result, tdm_round, tdm_round_reference
 from .mac_ra import RAParams, _decode_mask, ra_round
@@ -98,6 +100,22 @@ class PolicyRound:
     channel: object = None            # fading.FadingChannel (TDM fast path)
     positions: Optional[np.ndarray] = None       # (n, 2) round-start pos
     queue: Optional[EventQueue] = None
+    # fault-adjusted per-node rates this round (straggler-deflated, crashed
+    # nodes zeroed); None = the plan's rates verbatim
+    rates_bps: Optional[np.ndarray] = None
+    # (n, n) bool Gilbert-Elliott blackout mask this round (True = the link
+    # is blocked both ways); None = no blackouts. ``capacity_at`` already
+    # has it applied — policies that bypass it (the TDM coherence-block
+    # fast path) must mask their own channel fetches with it too.
+    blackout: Optional[np.ndarray] = None
+
+    @property
+    def round_rates(self) -> np.ndarray:
+        """The rates the MAC should air this round: the fault plane's
+        adjusted vector when present, else the plan's."""
+        if self.rates_bps is not None:
+            return np.asarray(self.rates_bps, dtype=np.float64)
+        return np.asarray(self.solution.rates_bps, dtype=np.float64)
 
 
 class SchedulingPolicy:
@@ -119,6 +137,13 @@ class SchedulingPolicy:
         ``effective_w`` is the mixing matrix training applies)."""
         raise NotImplementedError
 
+    def fallback(self, capacity: np.ndarray, sim) -> object:
+        """Last-feasible-resort plan when ``plan`` raises on a degenerate
+        (e.g. disconnected-survivor) capacity matrix: the common-rate TDM
+        schedule of ``runtime.fault.fallback_plan``, wrapped into this
+        policy's solution type. Always returns; ``feasible`` is False."""
+        return fallback_plan(capacity, sim.wire_bits)
+
 
 class TDMPolicy(SchedulingPolicy):
     """The paper's collision-free schedule, verbatim (adapter over
@@ -139,22 +164,38 @@ class TDMPolicy(SchedulingPolicy):
             jsolve = solve_joint_reference if reference else solve_joint
             return jsolve(capacity, cfg.model_bits, cfg.lambda_target,
                           method=cfg.solver)
-        return sim.controller.replan()
+        # pass the caller's matrix through verbatim: under fault injection it
+        # may be a stale snapshot sliced to the non-suspect survivors
+        return sim.controller.replan(capacity=capacity)
 
     def run_round(self, pr: PolicyRound) -> RoundResult:
         cfg = pr.cfg
+        rates = pr.round_rates
         if self.reference:
             return tdm_round_reference(
-                pr.clock, pr.solution.rates_bps, pr.intended, pr.wire_bits,
+                pr.clock, rates, pr.intended, pr.wire_bits,
                 pr.capacity_at, cfg.mac, queue=pr.queue)
         channel, pos = pr.channel, pr.positions
+        blk = pr.blackout
+        if blk is not None and blk.any():
+            # the coherence-block fast path fetches the channel directly,
+            # bypassing the simulator's blackout-masked capacity_at — apply
+            # the same mask here so fast and reference rounds agree
+            cat = lambda ts: np.where(
+                blk[None], 0.0, channel.capacity_at_times(pos, ts))
+            dok = lambda ts, i, rate: (
+                channel.decode_ok_at_times(pos, ts, i, rate)
+                & ~blk[i][None, :])
+        else:
+            cat = lambda ts: channel.capacity_at_times(pos, ts)
+            dok = lambda ts, i, rate: channel.decode_ok_at_times(
+                pos, ts, i, rate)
         return tdm_round(
-            pr.clock, pr.solution.rates_bps, pr.intended, pr.wire_bits,
+            pr.clock, rates, pr.intended, pr.wire_bits,
             pr.capacity_at, cfg.mac, queue=pr.queue,
             block_index=channel.block_indices,
-            capacity_at_times=lambda ts: channel.capacity_at_times(pos, ts),
-            decode_ok_at_times=lambda ts, i, rate:
-                channel.decode_ok_at_times(pos, ts, i, rate))
+            capacity_at_times=cat,
+            decode_ok_at_times=dok)
 
 
 class UniformRAPolicy(SchedulingPolicy):
@@ -180,10 +221,24 @@ class UniformRAPolicy(SchedulingPolicy):
     def run_round(self, pr: PolicyRound) -> RoundResult:
         cfg = pr.cfg
         return ra_round(
-            pr.clock, pr.solution.rates_bps, pr.solution.p, pr.intended,
+            pr.clock, pr.round_rates, pr.solution.p, pr.intended,
             pr.wire_bits, pr.capacity_at, cfg.ra,
             bandwidth_hz=cfg.bandwidth_hz, round_index=pr.round_index,
             seed=cfg.seed, queue=pr.queue)
+
+    def fallback(self, capacity: np.ndarray, sim) -> AccessSolution:
+        base = fallback_plan(capacity, sim.wire_bits)
+        n = capacity.shape[0]
+        tx = base.rates_bps > 0
+        n_tx = int(tx.sum())
+        slot = (float(sim.wire_bits / base.rates_bps[tx].min())
+                if n_tx else 0.0)
+        exp_slots = float(sim.cfg.ra.max_slots)
+        return AccessSolution(
+            p=np.where(tx, 1.0 / max(n_tx, 1), 0.0),
+            rates_bps=base.rates_bps, slot_s=slot, exp_slots=exp_slots,
+            t_round_s=slot * exp_slots, t_tdm_s=base.t_com_s,
+            lam=base.lam, w=base.w, feasible=False)
 
 
 def bass_weights(intended: np.ndarray, kind: str) -> np.ndarray:
@@ -327,13 +382,25 @@ class BASSPolicy(SchedulingPolicy):
 
     def run_round(self, pr: PolicyRound) -> RoundResult:
         result = bass_round(
-            pr.clock, pr.solution.rates_bps, pr.intended, pr.wire_bits,
+            pr.clock, pr.round_rates, pr.intended, pr.wire_bits,
             pr.capacity_at, self.params, bandwidth_hz=pr.cfg.bandwidth_hz,
             tx_fraction=pr.solution.tx_fraction,
             eligible=self._eligible(pr), round_index=pr.round_index,
             seed=pr.cfg.seed, queue=pr.queue)
         self._transmitted(pr, result)
         return result
+
+    def fallback(self, capacity: np.ndarray, sim) -> ScheduleSolution:
+        base = fallback_plan(capacity, sim.wire_bits)
+        lam = float(base.lam)
+        rate_factor = float("inf") if lam >= 1.0 else 1.0 / (1.0 - lam)
+        return ScheduleSolution(
+            rates_bps=base.rates_bps, tx_fraction=1.0,
+            duty_cycle=self.params.duty_cycle, lam=lam, lam_full=lam,
+            rate_factor=rate_factor, slots=int((base.rates_bps > 0).sum()),
+            t_full_s=base.t_com_s, t_round_s=base.t_com_s,
+            t_tdm_s=base.t_com_s, score_s=rate_factor * base.t_com_s,
+            w=base.w, feasible=False)
 
 
 class EnergyBASSPolicy(BASSPolicy):
@@ -364,7 +431,7 @@ class EnergyBASSPolicy(BASSPolicy):
         # transmitter set from the delivery/attempt counters is ambiguous,
         # so bass_round's sampled set is recomputed from the replayable rng
         # — identical draw, identical order, zero extra state to thread.
-        rates = np.asarray(pr.solution.rates_bps, dtype=np.float64)
+        rates = pr.round_rates
         can_tx = (np.isfinite(rates) & (rates > 0)
                   & self._eligible(pr))
         w = bass_weights(pr.intended, self.params.weight) * can_tx

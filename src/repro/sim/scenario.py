@@ -38,6 +38,15 @@ vocabulary:
   time under a fixed lambda. ``bass_energy`` additionally duty-cycles every
   node to half the rounds (``BASSParams(duty_cycle=0.5)``).
 
+* ``fault_burst`` / ``fault_crash`` / ``fault_stragglers`` / ``fault_chaos``
+  — the **fault-injection plane** (``ScenarioConfig.faults``,
+  ``sim.faults.FaultSchedule``): Gilbert–Elliott link blackout bursts,
+  correlated node crash/recover (crashed nodes rejoin with stale
+  parameters), per-node straggler slowdowns, stale planner inputs, and
+  heartbeat-timeout survivor replans with a common-rate fallback plan.
+  ``degrade`` picks how ``effective_w`` absorbs lost links ("renorm" |
+  "naive") and ``watchdog`` arms the train-scan NaN/divergence guard.
+
 Register custom scenarios with ``register``; fetch-and-override with
 ``get_scenario(name, **overrides)`` — overrides reach **nested** param
 dataclasses via dotted keys (``**{"ra.max_slots": 8}``) or sub-dict merge
@@ -51,7 +60,8 @@ from typing import Optional
 from ..core.channel import ChannelParams
 from ..core.compression import PAYLOAD_MODES, QuantConfig
 from .fading import FadingParams
-from .mac import MacParams
+from .faults import FaultParams
+from .mac import DEGRADE_MODES, MacParams
 from .mac_ra import RAParams
 from .policy import BASSParams, POLICY_KINDS
 
@@ -124,6 +134,19 @@ class ScenarioConfig:
     replan_drift_rel: float = 0.0      # 0 = never on drift
     # evaluation cadence for training traces
     eval_every_rounds: int = 4
+    # fault injection (sim.faults): None = the benign world of PRs 1-6.
+    # A FaultParams activates the deterministic fault plane — Gilbert-
+    # Elliott link blackout bursts, correlated crash/recover, stragglers,
+    # stale planner inputs, heartbeat-driven survivor replans.
+    faults: Optional[FaultParams] = None
+    # how effective_w degrades when faults/outage knock planned links out:
+    # "renorm" re-row-normalizes the delivered graph (graceful), "naive"
+    # keeps the planned weights with lost links zeroed (rows sum < 1)
+    degrade: str = "renorm"
+    # NaN/divergence watchdog in the train-on-trace scan (sim.batch): a
+    # node whose post-step parameters go non-finite is rolled back to its
+    # last good snapshot and rejoins through the next round's mix
+    watchdog: bool = False
 
     def __post_init__(self):
         if self.mac_kind not in MAC_KINDS:
@@ -149,6 +172,16 @@ class ScenarioConfig:
                 "policy=\"bass\" plans rates and transmit fractions; the "
                 "joint rate x payload sweep is not wired into sched_opt — "
                 "pick a concrete payload.mode")
+        if self.degrade not in DEGRADE_MODES:
+            raise ValueError(
+                f"degrade must be one of {DEGRADE_MODES}, "
+                f"got {self.degrade!r}")
+        if (self.faults is not None
+                and self.faults.crash_p > 0
+                and self.faults.keep_min > self.n_nodes):
+            raise ValueError(
+                "faults.keep_min exceeds n_nodes: the crash process could "
+                "never fire and the config is almost surely a typo")
 
     def resolved_policy(self) -> str:
         """The scheduling-policy kind a simulator will instantiate:
@@ -365,6 +398,65 @@ register(ScenarioConfig(
     fading_margin_bps=2e6,
     lambda_target=0.5,
     bass=BASSParams(duty_cycle=0.5),
+))
+
+register(ScenarioConfig(
+    # the fading world under bursty link blockage: a Gilbert-Elliott chain
+    # per node pair blacks links out for ~3-round bursts (mean 1/p_recover),
+    # far past one coherence block — the correlated-outage tail the fading
+    # margin alone cannot absorb. Extra retx passes model ARQ riding
+    # through the burst; effective_w degrades gracefully (renorm).
+    name="fault_burst",
+    fading=FadingParams(rayleigh=True, shadowing_sigma_db=3.0,
+                        shadowing_corr=0.9, coherence_s=0.01),
+    fading_margin_bps=2e6,
+    lambda_target=0.5,
+    mac=MacParams(max_retx_rounds=3),
+    faults=FaultParams(link_p_fail=0.08, link_p_recover=0.35),
+))
+
+register(ScenarioConfig(
+    # correlated crash/recover + the heartbeat recovery loop: a crash event
+    # takes the victim plus ~30 % of the other nodes down for 5 rounds;
+    # missed heartbeats trip the controller after ~2 round-times, the
+    # survivors replan (with the common-rate fallback if their graph
+    # disconnects), and crashed nodes rejoin with stale parameters.
+    name="fault_crash",
+    replan_every_rounds=8,
+    faults=FaultParams(crash_p=0.10, crash_corr=0.3, crash_down_rounds=5,
+                       heartbeat_timeout_s=1.0),
+))
+
+register(ScenarioConfig(
+    # stragglers + a lagging control plane: each round each node runs 4x
+    # slower with p=0.15 (its slots stretch on the simulated clock), and
+    # every replan sees the capacity matrix from 3 rounds ago while nodes
+    # keep moving — plans chase a stale world, so outage shows up even
+    # where the instantaneous channel would have been fine.
+    name="fault_stragglers",
+    mobility_kind="waypoint",
+    speed_mps=5.0,
+    replan_every_rounds=8,
+    replan_drift_rel=0.15,
+    faults=FaultParams(straggler_p=0.15, straggler_factor=4.0,
+                       plan_staleness_rounds=3),
+))
+
+register(ScenarioConfig(
+    # everything at once, plus the scan-plane watchdog: the chaos scenario
+    # the registry-wide smoke and the fault_compare bench lean on.
+    name="fault_chaos",
+    fading=FadingParams(rayleigh=True, shadowing_sigma_db=3.0,
+                        shadowing_corr=0.9, coherence_s=0.01),
+    fading_margin_bps=2e6,
+    lambda_target=0.5,
+    mac=MacParams(max_retx_rounds=3),
+    replan_every_rounds=8,
+    faults=FaultParams(link_p_fail=0.05, link_p_recover=0.35,
+                       crash_p=0.08, crash_corr=0.25, crash_down_rounds=4,
+                       straggler_p=0.10, straggler_factor=3.0,
+                       plan_staleness_rounds=2, heartbeat_timeout_s=1.0),
+    watchdog=True,
 ))
 
 register(ScenarioConfig(

@@ -35,10 +35,13 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from collections import deque
+
 from ..core.topology import adjacency_from_rates, spectral_lambda
 from ..runtime.fault import ElasticController
 from .events import EventKind, EventQueue, SimClock
 from .fading import FadingChannel
+from .faults import FaultSchedule
 from .mac import RoundResult, mean_drift
 from .mobility import PoissonChurn, make_mobility
 from .policy import PolicyRound, make_policy
@@ -79,6 +82,15 @@ class RoundRecord:
     # under payload.mode="auto")
     wire_bits: float = 0.0
     payload_mode: str = "none"
+    # fault-plane counters (all defaults = the benign world): crashed nodes
+    # this round, intended links suppressed by a Gilbert-Elliott blackout,
+    # the worst straggler slowdown, heartbeat-suspected nodes, and whether
+    # the active plan is the degraded common-rate fallback
+    n_down: int = 0
+    blackout_links: int = 0
+    slowdown_max: float = 1.0
+    n_suspect: int = 0
+    plan_fallback: bool = False
 
     @property
     def t_end_s(self) -> float:
@@ -126,6 +138,11 @@ class SimTrace:
             "final_n_live": self.records[-1].n_live if self.records else 0,
             "final_acc": next((r.acc for r in reversed(self.records)
                                if r.acc is not None), None),
+            "down_node_rounds": sum(r.n_down for r in self.records),
+            "blackout_link_rounds": sum(r.blackout_links
+                                        for r in self.records),
+            "plan_fallback_rounds": sum(r.plan_fallback
+                                        for r in self.records),
         }
 
 
@@ -141,9 +158,32 @@ class RoundContext:
     w_eff: np.ndarray
     solution: object          # rate_opt.RateSolution | access_opt.AccessSolution
     replanned: bool
+    # (n_live,) bool: churn-live nodes that are also *up* this round (not
+    # crashed by the fault plane). Down nodes keep identity W rows — stale
+    # parameters, no local gradient step. None = everyone is up.
+    active: Optional[np.ndarray] = None
 
 
 Driver = Callable[[RoundContext], Optional[dict]]
+
+
+def _expand_solution(sol, surv: np.ndarray, n: int):
+    """Embed a plan solved on the ``surv`` (non-suspect) sub-graph back to
+    the full ``n``-node live set: excluded nodes get rate 0 (silent) and an
+    identity W row (self-loop — stale parameters until they rejoin). Works
+    for every solution flavor (``RateSolution`` / ``AccessSolution`` /
+    ``ScheduleSolution``) because they share ``rates_bps`` and ``w`` and
+    are plain frozen dataclasses."""
+    rates = np.zeros(n, dtype=np.float64)
+    rates[surv] = np.asarray(sol.rates_bps, dtype=np.float64)
+    w = np.eye(n)
+    w[np.ix_(surv, surv)] = np.asarray(sol.w)
+    kw = {"rates_bps": rates, "w": w}
+    if hasattr(sol, "p"):         # AccessSolution: access probabilities
+        p = np.zeros(n, dtype=np.float64)
+        p[surv] = np.asarray(sol.p, dtype=np.float64)
+        kw["p"] = p
+    return dataclasses.replace(sol, **kw)
 
 
 class WirelessSimulator:
@@ -170,10 +210,18 @@ class WirelessSimulator:
         else:
             self.payload_mode = cfg.payload.mode
             self.wire_bits = cfg.wire_bits()
+        # deterministic fault plane (None = the benign world of PRs 1-6)
+        self.faults = (FaultSchedule(cfg.faults, cfg.n_nodes, cfg.seed)
+                       if cfg.faults is not None and cfg.faults.any_active()
+                       else None)
+        hb_timeout = (cfg.faults.heartbeat_timeout_s
+                      if cfg.faults is not None else float("inf"))
         self.controller = ElasticController(
             n_nodes=cfg.n_nodes, lambda_target=cfg.lambda_target,
             mode="wireless", capacity=self._mean_capacity(),
-            model_bits=self.wire_bits, solver_method=cfg.solver)
+            model_bits=self.wire_bits, solver_method=cfg.solver,
+            heartbeat_timeout_s=hb_timeout,
+            clock=lambda: self.clock.now)
         # who transmits each round, at what rates, in what slot structure:
         # one policy instance per simulator (stateful policies — duty-cycle
         # credits — reset with the run, keeping precompute/sweep replayable)
@@ -184,6 +232,16 @@ class WirelessSimulator:
         self._pending_churn: list[list[int]] = []
         self._need_replan = False
         self._cap_cache: Optional[tuple[int, np.ndarray]] = None
+        # recovery-loop state: heartbeat-suspected nodes (compacted index),
+        # the full-width capacity snapshots a stale planner sees, and the
+        # solver retry/backoff counters
+        self._suspect = np.zeros(cfg.n_nodes, dtype=bool)
+        staleness = (cfg.faults.plan_staleness_rounds
+                     if cfg.faults is not None else 0)
+        self._cap_history: deque = deque(maxlen=staleness + 1)
+        self._plan_fallback = False
+        self._replan_fail_streak = 0
+        self._replan_cooldown = 0
         self._replan()
 
     # -- geometry / channel --------------------------------------------------
@@ -202,24 +260,83 @@ class WirelessSimulator:
             self._cap_cache = (block, self.channel.capacity_at(pos_round, t))
         return self._cap_cache[1]
 
+    def _full_mean_capacity(self) -> np.ndarray:
+        """Mean capacity over **all original** nodes (churned included) —
+        the full-width snapshots the stale-planner history stores, sliced
+        by the live id list at use time so churn compaction between the
+        snapshot and the replan cannot misalign rows."""
+        return self.channel.mean_capacity(
+            self.mobility.positions(self.clock.now))
+
     # -- planning ------------------------------------------------------------
+    def _plan_capacity(self, m_now: np.ndarray) -> np.ndarray:
+        """What the planner sees: the current live-set mean capacity, or —
+        under ``faults.plan_staleness_rounds = d`` — the snapshot from d
+        rounds ago (the control plane lagging the data plane). Early rounds
+        fall back to the oldest snapshot available."""
+        if self.faults is None or not self._cap_history:
+            return m_now
+        if self.cfg.faults.plan_staleness_rounds == 0:
+            return m_now
+        full = self._cap_history[0]
+        ids = np.asarray(self.ids)
+        return full[np.ix_(ids, ids)]
+
     def _replan(self):
-        """Re-run the scheduling policy's planner on the current mean
-        capacity of the live node set: Algorithm 2 (via the elastic
-        controller) or the joint rate x payload sweep for ``TDMPolicy``, the
-        ``access_opt`` (p, R) sweep for ``UniformRAPolicy``, or the
-        ``sched_opt`` accuracy-per-second (rates, fraction) sweep for the
-        BASS policies — reference planners when ``cfg.solver`` names a
-        ``*_reference`` method (see ``sim.policy``)."""
+        """Re-run the scheduling policy's planner on the live node set's
+        mean capacity: Algorithm 2 (via the elastic controller) or the
+        joint rate x payload sweep for ``TDMPolicy``, the ``access_opt``
+        (p, R) sweep for ``UniformRAPolicy``, or the ``sched_opt``
+        accuracy-per-second (rates, fraction) sweep for the BASS policies —
+        reference planners when ``cfg.solver`` names a ``*_reference``
+        method (see ``sim.policy``).
+
+        Under fault injection the planner input may be a stale snapshot
+        (``_plan_capacity``) restricted to the non-suspect survivors; a
+        planner that raises on a degenerate survivor graph degrades to the
+        policy's common-rate ``fallback`` plan instead of crashing the run,
+        and the solver is retried with doubling backoff
+        (``_replan_cooldown``) rather than every round."""
         m = self._mean_capacity()
         self.controller.capacity = m
-        self.solution = self.policy.plan(m, self)
-        if self.cfg.payload.mode == "auto":
-            self.payload_mode = self.solution.mode
-            self.wire_bits = float(self.solution.wire_bits)
-        self._plan_cap = m
-        self._intended = adjacency_from_rates(
-            m, self.solution.rates_bps).astype(bool)
+        m_plan = self._plan_capacity(m)
+        n = len(self.ids)
+        surv = np.flatnonzero(~self._suspect[:n])
+        sub = m_plan[np.ix_(surv, surv)] if surv.size < n else m_plan
+        self.controller.last_replan_fallback = False
+        try:
+            sol = self.policy.plan(sub, self)
+            fell_back = bool(self.controller.last_replan_fallback)
+        except (ValueError, RuntimeError, np.linalg.LinAlgError):
+            sol = self.policy.fallback(sub, self)
+            fell_back = True
+        if self.cfg.payload.mode == "auto" and hasattr(sol, "mode"):
+            # (fallback plans carry no payload choice: keep the current one)
+            self.payload_mode = sol.mode
+            self.wire_bits = float(sol.wire_bits)
+        rates = np.asarray(sol.rates_bps, dtype=np.float64)
+        intended_sub = adjacency_from_rates(sub, rates).astype(bool)
+        if (~(np.isfinite(rates) & (rates > 0))).any():
+            # a zero/inf rate means "silent", but C >= 0 holds for every
+            # receiver — mask those rows off instead of intending the world
+            intended_sub[~(np.isfinite(rates) & (rates > 0))] = False
+        if surv.size < n:
+            self.solution = _expand_solution(sol, surv, n)
+            intended = np.zeros((n, n), dtype=bool)
+            intended[np.ix_(surv, surv)] = intended_sub
+        else:
+            self.solution = sol
+            intended = intended_sub
+        self._intended = intended
+        self._plan_cap = m_plan
+        self._plan_key = (n, tuple(surv.tolist()))
+        self._plan_fallback = fell_back
+        if fell_back:
+            self._replan_fail_streak += 1
+            self._replan_cooldown = min(2 ** self._replan_fail_streak, 16)
+        else:
+            self._replan_fail_streak = 0
+            self._replan_cooldown = 0
         self.replans += 1
         self._need_replan = False
 
@@ -244,31 +361,98 @@ class WirelessSimulator:
         self.failures.append((self._round, orig))
         survivors = [k for k in range(len(self.ids) + 1) if k != victim]
         self._pending_churn.append(survivors)
-        # compact the controller back to row-index space
-        self.controller.live = list(range(len(self.ids)))
-        self.controller.n_nodes = len(self.ids)
+        # compact the controller back to row-index space (keeps heartbeat
+        # stamps and suspect status aligned with the surviving rows)
+        self.controller.compact(survivors)
+        self._suspect = np.delete(self._suspect, victim)
         self._need_replan = True
 
     def _handle_round(self, driver: Optional[Driver]) -> RoundRecord:
         cfg = self.cfg
+        n = len(self.ids)
+        # fault plane: realize this round's injected faults (blackouts /
+        # crashes / stragglers are drawn in original-id space, sliced to the
+        # churn-live set), snapshot capacity for stale planners, and run the
+        # heartbeat detector before any replan decision.
+        if self.faults is not None and cfg.faults.plan_staleness_rounds > 0:
+            self._cap_history.append(self._full_mean_capacity())
+        if self.faults is not None:
+            rf = self.faults.round(self._round)
+            ids_arr = np.asarray(self.ids)
+            blk = rf.blackout[np.ix_(ids_arr, ids_arr)]
+            down = rf.down[ids_arr].copy()
+            slow = rf.slowdown[ids_arr]
+            if down.all():
+                # churn may have removed every pardoned node; keep one up so
+                # the live set never fully freezes
+                down[0] = False
+        else:
+            rf = None
+            blk = None
+            down = np.zeros(n, dtype=bool)
+            slow = np.ones(n)
+        if (self.faults is not None
+                and np.isfinite(self.controller.heartbeat_timeout_s)):
+            now = self.clock.now
+            timeout = self.controller.heartbeat_timeout_s
+            fresh = [k for k in range(n) if self._suspect[k]
+                     and now - self.controller.last_heartbeat(k) <= timeout]
+            if fresh:
+                # a heartbeat came back: re-admit at the next plan
+                self.controller.revive(fresh, at=now)
+                self._suspect[np.asarray(fresh)] = False
+                self._need_replan = True
+            ev = self.controller.detect(self._round, now=now)
+            if ev is not None:
+                self._suspect[list(ev.failed_nodes)] = True
+                self._need_replan = True
+
         if (cfg.replan_every_rounds > 0 and self._round > 0
                 and self._round % cfg.replan_every_rounds == 0):
             self._need_replan = True
-        if self._need_replan or self._drifted():
-            self._replan()
-            replanned = True
+        # a plan solved for a different width/survivor set is unusable —
+        # replan regardless of the fallback-retry cooldown
+        surv_key = (n, tuple(np.flatnonzero(~self._suspect).tolist()))
+        forced = getattr(self, "_plan_key", None) != surv_key
+        if self._need_replan or forced or self._drifted():
+            if forced or self._replan_cooldown == 0:
+                self._replan()
+                replanned = True
+            else:
+                self._replan_cooldown -= 1
+                self._need_replan = True     # retry once the backoff lapses
+                replanned = False
         else:
             replanned = False
 
         pos_round = self._positions()
         self._cap_cache = None
+        rates_round = None
+        intended_round = self._intended
+        if rf is not None:
+            # stragglers stretch airtime (rate /= slowdown); crashed nodes
+            # fall silent and receive nothing this round
+            rates_round = np.asarray(self.solution.rates_bps,
+                                     dtype=np.float64) / slow
+            if down.any():
+                rates_round = np.where(down, 0.0, rates_round)
+                intended_round = (intended_round
+                                  & ~down[:, None] & ~down[None, :])
+        if blk is not None and blk.any():
+            def cap_at(t, _blk=blk):
+                # where() not *: capacity diagonals may be inf (inf*0=nan)
+                return np.where(_blk, 0.0, self._capacity_at(pos_round, t))
+        else:
+            def cap_at(t):
+                return self._capacity_at(pos_round, t)
         result = self.policy.run_round(PolicyRound(
             clock=self.clock, solution=self.solution,
-            intended=self._intended, wire_bits=self.wire_bits,
-            capacity_at=lambda t: self._capacity_at(pos_round, t),
+            intended=intended_round, wire_bits=self.wire_bits,
+            capacity_at=cap_at,
             cfg=cfg, round_index=self._round, channel=self.channel,
-            positions=pos_round))
-        w_eff = result.effective_w()
+            positions=pos_round,
+            rates_bps=rates_round, blackout=blk))
+        w_eff = result.effective_w(cfg.degrade)
 
         metrics: dict = {}
         if driver is not None:
@@ -276,11 +460,16 @@ class WirelessSimulator:
                 round=self._round, t_start_s=result.t_start_s,
                 ids=list(self.ids), churn=self._pending_churn,
                 result=result, w_eff=w_eff, solution=self.solution,
-                replanned=replanned)
+                replanned=replanned,
+                active=(~down if rf is not None else None))
             metrics = driver(ctx) or {}
         self._pending_churn = []
         compute_s = float(metrics.get("compute_s", cfg.compute_s_per_round))
         self.clock.advance(compute_s)
+        if self.faults is not None:
+            for k in range(n):
+                if not down[k]:
+                    self.controller.heartbeat(k)   # stamps sim-time now
 
         rec = RoundRecord(
             round=self._round, n_live=len(self.ids),
@@ -297,7 +486,13 @@ class WirelessSimulator:
             loss=metrics.get("loss"), acc=metrics.get("acc"),
             mean_drift=mean_drift(w_eff),
             wire_bits=self.wire_bits,
-            payload_mode=self.payload_mode)
+            payload_mode=self.payload_mode,
+            n_down=int(down.sum()),
+            blackout_links=(int((blk & result.intended).sum())
+                            if blk is not None else 0),
+            slowdown_max=float(slow.max()),
+            n_suspect=int(self._suspect.sum()),
+            plan_fallback=bool(self._plan_fallback))
         self._round += 1
         return rec
 
@@ -350,6 +545,7 @@ class WirelessSimulator:
         n = self.cfg.n_nodes
         ws: list[np.ndarray] = []
         lives: list[np.ndarray] = []
+        actives: list[np.ndarray] = []
 
         def recorder(ctx: RoundContext) -> None:
             ids = np.asarray(ctx.ids, dtype=np.int64)
@@ -357,6 +553,9 @@ class WirelessSimulator:
             mask = np.zeros(n, dtype=bool)
             mask[ids] = True
             lives.append(mask)
+            act = np.zeros(n, dtype=bool)
+            act[ids if ctx.active is None else ids[ctx.active]] = True
+            actives.append(act)
             return None
 
         trace = self.run(n_rounds, recorder)
@@ -365,6 +564,8 @@ class WirelessSimulator:
             n_nodes=n,
             w_eff=(np.stack(ws) if ws else np.zeros((0, n, n))),
             live=(np.stack(lives) if lives else np.zeros((0, n), dtype=bool)),
+            active=(np.stack(actives) if actives
+                    else np.zeros((0, n), dtype=bool)),
             t_start_s=np.array([rec.t_start_s for rec in trace.records]),
             t_comm_s=np.array([rec.t_comm_s for rec in trace.records]),
             t_end_s=np.array([rec.t_end_s for rec in trace.records]),
@@ -395,6 +596,10 @@ class TrainTrace:
     n_nodes: int
     w_eff: np.ndarray       # (rounds, n, n) float64
     live: np.ndarray        # (rounds, n) bool
+    # live & not crashed by the fault plane this round: the gradient mask
+    # the scan applies (down nodes keep stale params, take no local step).
+    # == live everywhere when the scenario injects no faults.
+    active: np.ndarray      # (rounds, n) bool
     t_start_s: np.ndarray   # (rounds,)
     t_comm_s: np.ndarray    # (rounds,)
     t_end_s: np.ndarray     # (rounds,) — comm + cfg.compute_s_per_round
@@ -421,6 +626,7 @@ class TraceBatch:
     n_nodes: int
     w_eff: np.ndarray       # (S, rounds, n, n)
     live: np.ndarray        # (S, rounds, n)
+    active: np.ndarray      # (S, rounds, n) — live minus crashed (faults)
     t_start_s: np.ndarray   # (S, rounds)
     t_comm_s: np.ndarray    # (S, rounds)
     t_end_s: np.ndarray     # (S, rounds)
@@ -453,6 +659,7 @@ def stack_traces(traces: list) -> TraceBatch:
         n_nodes=n,
         w_eff=np.stack([t.w_eff for t in traces]),
         live=np.stack([t.live for t in traces]),
+        active=np.stack([t.active for t in traces]),
         t_start_s=np.stack([t.t_start_s for t in traces]),
         t_comm_s=np.stack([t.t_comm_s for t in traces]),
         t_end_s=np.stack([t.t_end_s for t in traces]),
@@ -557,9 +764,15 @@ def simulate_dpsgd_cnn(
     shards = node_splits(ds.train_x, ds.train_y, cfg.n_nodes, seed=0)
     params = dpsgd.replicate(cnn.cnn_init(jax.random.key(cfg.seed)),
                              cfg.n_nodes)
+    faulty = cfg.faults is not None and cfg.faults.any_active()
     if compressed:
         cstep = dpsgd.make_dpsgd_compressed_step(
             lambda p, b: cnn.cnn_loss(p, b), cfg.payload, DPSGDConfig(eta=eta))
+    elif faulty:
+        # crashed nodes skip their local gradient step (identity W row keeps
+        # their params frozen) — same masked semantics as the scan path
+        mstep = dpsgd.make_dpsgd_masked_step(lambda p, b: cnn.cnn_loss(p, b),
+                                             DPSGDConfig(eta=eta))
     else:
         step = dpsgd.make_dpsgd_step(lambda p, b: cnn.cnn_loss(p, b),
                                      DPSGDConfig(eta=eta))
@@ -590,11 +803,16 @@ def simulate_dpsgd_cnn(
                 [state["shards"][i][0][idx[i]] for i in range(n_live)])),
              "labels": jnp.asarray(np.stack(
                 [state["shards"][i][1][idx[i]] for i in range(n_live)]))}
+        active = (jnp.ones(n_live, dtype=bool) if ctx.active is None
+                  else jnp.asarray(ctx.active))
         t0 = time.perf_counter()
         if compressed:
             state["params"], state["residuals"], losses = cstep(
                 state["params"], b, jnp.asarray(ctx.w_eff),
-                jnp.ones(n_live, dtype=bool), state["residuals"])
+                active, state["residuals"])
+        elif faulty:
+            state["params"], losses = mstep(state["params"], b,
+                                            jnp.asarray(ctx.w_eff), active)
         else:
             state["params"], losses = step(state["params"], b,
                                            jnp.asarray(ctx.w_eff))

@@ -3,8 +3,9 @@ import pytest
 
 from repro.core import channel
 from repro.core.bound import BoundParams
-from repro.runtime.fault import ElasticController
-from repro.runtime.straggler import StragglerPolicy, straggler_penalty
+from repro.runtime.fault import ElasticController, fallback_plan
+from repro.runtime.straggler import (StragglerPolicy, ring_neighbors,
+                                     straggler_penalty)
 
 
 def test_heartbeat_detection():
@@ -70,3 +71,141 @@ def test_straggler_policy_monotone():
 def test_gossip_beats_allreduce_under_stragglers():
     g, ar = straggler_penalty(degree=2, n=64, slow_prob=0.05, slow_factor=5.0)
     assert g < ar  # gossip waits on neighbors, all-reduce on the whole fleet
+
+
+# -- injectable clock (determinism) -----------------------------------------
+
+def test_identical_runs_produce_identical_event_logs():
+    """The controller never reads the wall clock: two identical sequences
+    of heartbeats/detections yield bit-identical event logs."""
+    def run():
+        t = {"now": 0.0}
+        ec = ElasticController(4, 0.8, mode="pod", heartbeat_timeout_s=2.0,
+                               clock=lambda: t["now"])
+        logs = []
+        for step in range(8):
+            t["now"] += 1.0
+            for i in ec.survivors():
+                if not (i == 2 and step >= 3):   # node 2 goes silent
+                    ec.heartbeat(i)
+            ev = ec.detect(step)
+            if ev is not None:
+                logs.append((ev.step, ev.failed_nodes, ev.detected_at))
+        return logs, [
+            (e.step, e.failed_nodes, e.detected_at) for e in ec.events]
+
+    a, b = run(), run()
+    assert a == b
+    assert a[0], "the silent node was never detected"
+    # detection stamps come from the injected clock, not time.time()
+    assert all(at == float(int(at)) and at <= 8.0 for _, _, at in a[0])
+
+
+def test_default_clock_is_frozen_not_wall_time():
+    ec1 = ElasticController(3, 0.8, mode="pod", heartbeat_timeout_s=1.0)
+    ec2 = ElasticController(3, 0.8, mode="pod", heartbeat_timeout_s=1.0)
+    assert [ec1.last_heartbeat(i) for i in range(3)] \
+        == [ec2.last_heartbeat(i) for i in range(3)] == [0.0, 0.0, 0.0]
+    assert ec1.detect(step=0) is None       # frozen clock: nobody times out
+
+
+# -- degraded replans on disconnected survivor graphs -----------------------
+
+def test_wireless_replan_disconnected_survivors_falls_back():
+    """A survivor capacity matrix with no usable link must degrade to the
+    common-rate fallback plan, not crash the run."""
+    cap = np.zeros((3, 3))          # fully disconnected survivors
+    ec = ElasticController(3, 0.8, mode="wireless", capacity=cap,
+                           model_bits=1e5)
+    sol = ec.replan()
+    assert ec.last_replan_fallback
+    assert not sol.feasible
+    np.testing.assert_allclose(sol.rates_bps, 0.0)
+    np.testing.assert_allclose(sol.w, np.eye(3))
+    assert sol.lam == 1.0
+
+
+def test_fallback_plan_partial_connectivity():
+    cap = np.array([[np.inf, 1e6, 0.0],
+                    [1e6, np.inf, 0.0],
+                    [0.0, 0.0, np.inf]])   # node 2 isolated
+    sol = fallback_plan(cap, model_bits=1e5)
+    assert not sol.feasible
+    assert sol.rates_bps[0] == sol.rates_bps[1] == 1e6
+    assert sol.rates_bps[2] == 0.0          # isolated node stays silent
+    np.testing.assert_allclose(sol.w.sum(axis=1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(sol.w[2], [0.0, 0.0, 1.0])
+    assert sol.t_com_s == pytest.approx(2 * 1e5 / 1e6)
+
+
+def test_wireless_recover_roundtrip_through_reshape_nodes():
+    import jax.numpy as jnp
+
+    from repro.checkpoint.ckpt import reshape_nodes
+
+    pos = channel.random_placement(5, 200.0, seed=1)
+    cap = channel.capacity_matrix(pos,
+                                  channel.ChannelParams(path_loss_exp=4.0))
+    ec = ElasticController(5, 0.8, mode="wireless", capacity=cap,
+                           model_bits=698880.0)
+    state = {"w": jnp.arange(15.0).reshape(5, 3)}
+    ec.fail(3, [1, 4])
+    new_state, plan = ec.recover(state, reshape_nodes)
+    assert new_state["w"].shape == (3, 3)
+    # survivor rows ride along unchanged, in original order
+    np.testing.assert_allclose(np.asarray(new_state["w"]),
+                               np.asarray(state["w"])[[0, 2, 3]])
+    assert plan.rates_bps.shape == (3,)
+    assert ec.n_nodes == 3 and ec.survivors() == [0, 1, 2]
+
+
+def test_controller_compact_preserves_heartbeats_and_live():
+    t = {"now": 10.0}
+    ec = ElasticController(4, 0.8, mode="pod", heartbeat_timeout_s=5.0,
+                           clock=lambda: t["now"])
+    ec.heartbeat(0, at=1.0)
+    ec.heartbeat(2, at=3.0)
+    ec.fail(0, [1])                 # node 1 dead, then the caller compacts
+    ec.compact([0, 2, 3])
+    assert ec.n_nodes == 3 and ec.survivors() == [0, 1, 2]
+    assert ec.last_heartbeat(0) == 1.0      # old node 0
+    assert ec.last_heartbeat(1) == 3.0      # old node 2
+    ec.fail(5, [1])                         # suspect it, then a heartbeat
+    ec.revive([1], at=20.0)                 # comes back
+    assert ec.survivors() == [0, 1, 2]
+    assert ec.last_heartbeat(1) == 20.0
+
+
+# -- ring_neighbors exact counts --------------------------------------------
+
+def test_ring_neighbors_exact_counts():
+    for n, degree in [(5, 2), (6, 3), (7, 4), (4, 0), (3, 5), (1, 2)]:
+        neigh = ring_neighbors(n, degree)
+        k = min(degree, n - 1)
+        assert neigh.shape == (n, k + 1)
+        for i in range(n):
+            row = neigh[i]
+            assert row[0] == i                       # self first
+            assert len(set(row.tolist())) == k + 1   # no double counting
+    # degree 2 is the ring: self + the two adjacent nodes
+    np.testing.assert_array_equal(
+        np.sort(ring_neighbors(5, 2), axis=1)[0], [0, 1, 4])
+
+
+def test_gossip_penalty_at_most_allreduce_and_saturates():
+    # gossip can never wait longer than the global barrier, at any degree —
+    # the over-counting ring of the old implementation broke this for odd
+    # degrees (duplicate offsets inflated the neighbor max)
+    for degree in range(0, 8):
+        g, ar = straggler_penalty(degree=degree, n=16, slow_prob=0.2,
+                                  slow_factor=4.0, trials=500)
+        assert g <= ar + 1e-12
+    # degree >= n-1 is exactly the all-reduce barrier
+    g, ar = straggler_penalty(degree=15, n=16, slow_prob=0.2,
+                              slow_factor=4.0, trials=500)
+    assert g == pytest.approx(ar)
+    # degree 0: nobody waits on anyone (self-only)
+    g0, _ = straggler_penalty(degree=0, n=16, slow_prob=0.2,
+                              slow_factor=4.0, trials=500)
+    expected = 1.0 + 0.2 * 3.0      # E[self time] = 1 + p (f - 1)
+    assert g0 == pytest.approx(expected, rel=0.1)

@@ -1,0 +1,316 @@
+"""Fault-injection plane: schedule determinism, graceful W-degradation,
+scan-vs-driver parity under injected faults, watchdog rollback, and the
+registry-wide chaos smoke."""
+import numpy as np
+import pytest
+
+from repro.sim import (DEGRADE_MODES, FaultParams, FaultSchedule, RoundResult,
+                       get_scenario, list_scenarios, precompute_trace,
+                       train_on_trace)
+from repro.sim.events import SimClock
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule
+# ---------------------------------------------------------------------------
+
+def test_schedule_deterministic_and_access_order_independent():
+    fp = FaultParams(link_p_fail=0.1, crash_p=0.2, crash_corr=0.4,
+                     crash_down_rounds=3, straggler_p=0.3)
+    a = FaultSchedule(fp, 8, seed=7)
+    b = FaultSchedule(fp, 8, seed=7)
+    # query a out of order / repeatedly, b strictly in order
+    a.round(15)
+    a.round(3)
+    a.round(3)
+    for r in range(16):
+        ra, rb = a.round(r), b.round(r)
+        assert np.array_equal(ra.blackout, rb.blackout)
+        assert np.array_equal(ra.down, rb.down)
+        assert np.array_equal(ra.slowdown, rb.slowdown)
+
+
+def test_schedule_tensors_shapes_and_invariants():
+    fp = FaultParams(link_p_fail=0.15, crash_p=0.3, crash_corr=0.5,
+                     crash_down_rounds=2, keep_min=3, straggler_p=0.2,
+                     straggler_factor=4.0)
+    n, rounds = 6, 40
+    blk, down, slow = FaultSchedule(fp, n, seed=1).tensors(rounds)
+    assert blk.shape == (rounds, n, n) and blk.dtype == bool
+    assert down.shape == (rounds, n) and slow.shape == (rounds, n)
+    # blackouts symmetric, never self-loops
+    assert np.array_equal(blk, np.swapaxes(blk, 1, 2))
+    assert not blk[:, np.arange(n), np.arange(n)].any()
+    # keep_min honored every round
+    assert ((n - down.sum(axis=1)) >= fp.keep_min).all()
+    # slowdowns are {1, factor}
+    assert set(np.unique(slow)) <= {1.0, fp.straggler_factor}
+    # something actually fired
+    assert blk.any() and down.any() and (slow > 1).any()
+
+
+def test_crash_sentences_run_in_consecutive_rounds():
+    fp = FaultParams(crash_p=0.5, crash_down_rounds=4, keep_min=2)
+    _, down, _ = FaultSchedule(fp, 6, seed=0).tensors(60)
+    assert down.any()
+    for i in range(6):
+        col = down[:, i].astype(int)
+        runs = np.flatnonzero(np.diff(np.concatenate([[0], col, [0]])) == 1)
+        ends = np.flatnonzero(np.diff(np.concatenate([[0], col, [0]])) == -1)
+        for s, e in zip(runs, ends):
+            # each served sentence is a multiple of crash_down_rounds
+            # (re-crash while down is impossible; back-to-back events extend)
+            assert (e - s) >= fp.crash_down_rounds or e == len(col)
+
+
+def test_gilbert_elliott_bursts_are_longer_than_iid():
+    # with p_recover = 0.2 mean burst length is 5 rounds; i.i.d. blackouts
+    # at the same stationary rate would have mean run length ~1
+    fp = FaultParams(link_p_fail=0.05, link_p_recover=0.2)
+    blk, _, _ = FaultSchedule(fp, 4, seed=3).tensors(600)
+    col = blk[:, 0, 1].astype(int)
+    assert col.any()
+    edges = np.diff(np.concatenate([[0], col, [0]]))
+    starts, ends = np.flatnonzero(edges == 1), np.flatnonzero(edges == -1)
+    mean_burst = float(np.mean(ends - starts))
+    assert mean_burst > 2.0   # geometric(0.2) ~ 5, i.i.d. would be ~1.05
+
+
+def test_fault_params_validation():
+    with pytest.raises(ValueError):
+        FaultParams(link_p_fail=1.5)
+    with pytest.raises(ValueError):
+        FaultParams(link_p_recover=0.0)
+    with pytest.raises(ValueError):
+        FaultParams(straggler_factor=0.5)
+    with pytest.raises(ValueError):
+        FaultParams(crash_down_rounds=0)
+    with pytest.raises(ValueError):
+        FaultParams(heartbeat_timeout_s=0.0)
+    assert not FaultParams().any_active()
+    assert FaultParams(straggler_p=0.1).any_active()
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: renorm vs naive
+# ---------------------------------------------------------------------------
+
+def _round_result(intended, delivered):
+    clock = SimClock()
+    clock.advance(1.0)
+    intended = np.asarray(intended, dtype=bool)
+    return RoundResult(
+        t_start_s=0.0, duration_s=1.0, intended=intended,
+        delivered=np.asarray(delivered, dtype=bool),
+        packets_first_pass=0, retx_packets=0,
+        outage_links=int((intended & ~np.asarray(delivered, bool)).sum()),
+        offered_bits=0.0, goodput_bits=0.0)
+
+
+def test_degrade_modes_agree_on_full_delivery():
+    intended = ~np.eye(4, dtype=bool)
+    res = _round_result(intended, intended.copy())
+    for mode in DEGRADE_MODES:
+        w = res.effective_w(mode)
+        np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(res.effective_w("renorm"),
+                               res.effective_w("naive"), atol=1e-12)
+
+
+def test_naive_rows_leak_mass_on_loss_renorm_does_not():
+    intended = ~np.eye(4, dtype=bool)
+    delivered = intended.copy()
+    delivered[1, 2] = False           # node 2 lost node 1's broadcast
+    res = _round_result(intended, delivered)
+    w_r = res.effective_w("renorm")
+    w_n = res.effective_w("naive")
+    np.testing.assert_allclose(w_r.sum(axis=1), 1.0, atol=1e-12)
+    sums_n = w_n.sum(axis=1)
+    assert sums_n[2] < 1.0 - 1e-9     # the receiver that lost a link
+    others = np.delete(sums_n, 2)
+    np.testing.assert_allclose(others, 1.0, atol=1e-12)
+    with pytest.raises(ValueError):
+        res.effective_w("bogus")
+
+
+# ---------------------------------------------------------------------------
+# Fault scenarios end to end
+# ---------------------------------------------------------------------------
+
+def test_fault_scenarios_registered_and_reproducible():
+    names = [n for n in list_scenarios() if n.startswith("fault_")]
+    assert {"fault_burst", "fault_crash", "fault_stragglers",
+            "fault_chaos"} <= set(names)
+    t1 = precompute_trace("fault_chaos", 5)
+    t2 = precompute_trace("fault_chaos", 5)
+    np.testing.assert_array_equal(t1.w_eff, t2.w_eff)
+    np.testing.assert_array_equal(t1.active, t2.active)
+    np.testing.assert_array_equal(t1.t_end_s, t2.t_end_s)
+
+
+def test_fault_burst_suppresses_links_and_stays_row_stochastic():
+    tr = precompute_trace("fault_burst", 8)
+    s = tr.trace.summary()
+    assert s["blackout_link_rounds"] > 0
+    np.testing.assert_allclose(tr.w_eff.sum(axis=-1), 1.0, atol=1e-9)
+    # blackouts only remove edges; down nothing, so active == live
+    np.testing.assert_array_equal(tr.active, tr.live)
+
+
+def test_fault_stragglers_stretch_airtime():
+    slow = precompute_trace("fault_stragglers", 8)
+    base = precompute_trace("fault_stragglers", 8,
+                            faults=None)   # same world, faults off
+    assert max(r.slowdown_max for r in slow.trace.records) > 1.0
+    # straggler rounds take longer on the simulated clock
+    assert slow.trace.t_end_s > base.trace.t_end_s
+
+
+def test_fault_crash_freezes_nodes_and_recovers():
+    tr = precompute_trace("fault_crash", 30)
+    down_rounds = [r for r in range(tr.n_rounds)
+                   if (tr.live[r] & ~tr.active[r]).any()]
+    assert down_rounds, "no crash fired in 30 rounds — retune the scenario"
+    r = down_rounds[0]
+    downed = tr.live[r] & ~tr.active[r]
+    # a crashed node's W row is identity: stale params, no mixing in or out
+    for i in np.flatnonzero(downed):
+        np.testing.assert_allclose(tr.w_eff[r, i], np.eye(tr.n_nodes)[i],
+                                   atol=1e-12)
+        np.testing.assert_allclose(tr.w_eff[r, tr.active[r], i], 0.0,
+                                   atol=1e-12)
+    # the sentence ends: some crashed node is live-and-active again later
+    recovered = any(
+        tr.active[r2, i] and tr.live[r2, i]
+        for i in np.flatnonzero(downed)
+        for r2 in range(r + 1, tr.n_rounds))
+    assert recovered or r + tr.cfg.faults.crash_down_rounds >= tr.n_rounds
+
+
+def test_heartbeat_suspects_crashed_nodes_and_replans():
+    tr = precompute_trace("fault_crash", 30)
+    s = tr.trace.summary()
+    if s["down_node_rounds"] == 0:
+        pytest.skip("no crash fired in this window")
+    assert sum(r.n_suspect for r in tr.trace.records) > 0
+    assert tr.trace.replans > 30 // 8     # beyond the scheduled cadence
+
+
+# ---------------------------------------------------------------------------
+# Watchdog: NaN rollback inside the jitted scan
+# ---------------------------------------------------------------------------
+
+def _quad_loss(p, b):
+    import jax.numpy as jnp
+    return jnp.mean((p["x"] - b["t"]) ** 2)
+
+
+def _ring_w(n):
+    w = np.zeros((n, n))
+    for i in range(n):
+        w[i, i] = w[i, (i + 1) % n] = w[i, (i - 1) % n] = 1 / 3
+    return w
+
+
+def test_watchdog_rolls_back_poisoned_node():
+    import jax.numpy as jnp
+
+    n, d, rounds = 4, 3, 6
+    rng = np.random.default_rng(0)
+    params = {"x": jnp.asarray(rng.normal(size=(n, d)))}
+    w_seq = jnp.asarray(np.stack([_ring_w(n)] * rounds))
+    live = jnp.ones((rounds, n), dtype=bool)
+    targets = rng.normal(size=(rounds, n, d))
+    targets[2, 1] = np.nan            # poison node 1's round-2 batch
+    batches = {"t": jnp.asarray(targets)}
+
+    final, losses, rb = train_on_trace(
+        _quad_loss, params, w_seq, live, batches, watchdog=True)
+    rb = np.asarray(rb)
+    assert rb[2, 1] and rb[:2].sum() == 0
+    assert np.isfinite(np.asarray(final["x"])).all()
+    # losses after the poisoned round stay finite: the rollback cleansed
+    # the state before it could mix into the neighbors
+    assert np.isfinite(np.asarray(losses)[3:]).all()
+
+    final_off, _ = train_on_trace(
+        _quad_loss, params, w_seq, live, batches, watchdog=False)
+    assert not np.isfinite(np.asarray(final_off["x"])).all()
+
+
+def test_watchdog_noop_on_healthy_run():
+    import jax.numpy as jnp
+
+    n, d, rounds = 4, 3, 5
+    rng = np.random.default_rng(1)
+    params = {"x": jnp.asarray(rng.normal(size=(n, d)))}
+    w_seq = jnp.asarray(np.stack([_ring_w(n)] * rounds))
+    live = jnp.ones((rounds, n), dtype=bool)
+    batches = {"t": jnp.asarray(rng.normal(size=(rounds, n, d)))}
+    f_on, l_on, rb = train_on_trace(_quad_loss, params, w_seq, live, batches,
+                                    watchdog=True)
+    f_off, l_off = train_on_trace(_quad_loss, params, w_seq, live, batches,
+                                  watchdog=False)
+    assert np.asarray(rb).sum() == 0
+    np.testing.assert_allclose(np.asarray(f_on["x"]), np.asarray(f_off["x"]),
+                               atol=1e-12)
+    np.testing.assert_allclose(np.asarray(l_on), np.asarray(l_off),
+                               atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Registry-wide chaos smoke + parity under faults
+# ---------------------------------------------------------------------------
+
+_CHAOS = FaultParams(link_p_fail=0.1, link_p_recover=0.4, crash_p=0.15,
+                     crash_corr=0.3, crash_down_rounds=2, keep_min=2,
+                     straggler_p=0.2, straggler_factor=3.0,
+                     plan_staleness_rounds=1, heartbeat_timeout_s=5.0)
+
+
+def test_every_registered_scenario_survives_chaos():
+    """Every scenario x a nontrivial FaultSchedule: precompute 3 rounds and
+    run the jitted scan — parameters stay finite, renorm W stays
+    row-stochastic. (No t_comm > 0 assertion here: a crash round under a
+    non-TDM policy may legally put nothing on the air.)"""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    for name in list_scenarios():
+        tr = precompute_trace(name, 3, faults=_CHAOS, degrade="renorm")
+        assert tr.n_rounds == 3, name
+        np.testing.assert_allclose(tr.w_eff.sum(axis=-1), 1.0, atol=1e-9,
+                                   err_msg=name)
+        assert (tr.active <= tr.live).all(), name
+        n = tr.n_nodes
+        params = {"x": jnp.asarray(rng.normal(size=(n, 2)))}
+        final, losses = train_on_trace(
+            _quad_loss, params,
+            jnp.asarray(tr.w_eff), jnp.asarray(tr.live),
+            {"t": jnp.asarray(rng.normal(size=(3, n, 2)))},
+            active_seq=jnp.asarray(tr.active))
+        assert np.isfinite(np.asarray(final["x"])).all(), name
+        assert np.isfinite(np.asarray(losses)).all(), name
+
+
+def test_scan_driver_parity_under_faults():
+    """The acceptance bar: the batched scan reproduces the per-round driver
+    loss-for-loss (<= 1e-5) under bursts + crash-recovery + stragglers,
+    watchdog off."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.sim import simulate_dpsgd_cnn, train_cnn_on_traces
+
+    cfg = get_scenario("fault_chaos", watchdog=False)
+    trace, params = simulate_dpsgd_cnn(cfg, epochs=1, n_train=400,
+                                       n_test=100)
+    traces, out = train_cnn_on_traces([cfg], epochs=1, n_train=400,
+                                      n_test=100)
+    drv = np.asarray([r.loss for r in trace.records])
+    assert np.abs(drv - np.asarray(out["losses"][0])).max() <= 1e-5
+    diffs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                         params, out["final_params"][0])
+    assert max(jax.tree.leaves(diffs)) <= 1e-5
+    drv_acc = [r.acc for r in trace.records if r.acc is not None]
+    assert abs(drv_acc[-1] - out["acc"][0][-1]) <= 1e-5
