@@ -129,7 +129,10 @@ def check_parity() -> dict:
                             and out["static_acc_ok"]
                             and out["static_param_diff"] <= 1e-5)
 
-    cfg = get_scenario("churn", churn_rate_per_s=0.4, solver="greedy",
+    # rate chosen so the pinned placement stream yields >= 2 failures inside
+    # the PARITY horizon (the churn_failures >= 1 gate below must actually
+    # exercise the masked/reshape paths, not vacuously pass)
+    cfg = get_scenario("churn", churn_rate_per_s=1.5, solver="greedy",
                        compute_s_per_round=0.05, eval_every_rounds=2)
     trace, params = simulate_dpsgd_cnn(cfg, **PARITY)
     traces, scan = train_cnn_on_traces([cfg], **PARITY)
@@ -156,6 +159,8 @@ def main(argv=None) -> int:
 
     import jax
 
+    from repro.analysis import repo_is_clean
+
     n_seeds = 3 if args.quick else 16
     scan_reps = 1 if args.quick else 3
     result = {
@@ -165,6 +170,7 @@ def main(argv=None) -> int:
         "numpy": np.__version__,
         "jax": jax.__version__,
         "device": jax.devices()[0].platform,
+        "analysis_clean": repo_is_clean(),
         "sweep": bench_sweep(n_seeds, scan_reps),
         "parity": check_parity(),
     }

@@ -1,0 +1,47 @@
+"""AST-based invariant linter for the repro tree.
+
+Every quantitative claim this repro makes — the Eq. 3 airtime anchor at
+1e-9, batched solvers bit-identical to their ``*_reference`` siblings,
+scan-vs-driver parity <= 1e-5 — rests on invariants the type system cannot
+see: domain-separated RNG streams, injectable clocks, no host syncs inside
+jitted planes, and reference/parity-pin coverage for every batched solver.
+This package checks those invariants statically (stdlib ``ast`` only, no
+third-party deps) so the bug classes PR 5 and PR 7 each fixed by hand
+(``functools.cache`` freezing the Pallas backend choice; ``time.time()``
+making fault-recovery logs nondeterministic) are caught by a machine.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis            # human output
+    PYTHONPATH=src python -m repro.analysis --json     # machine output
+    PYTHONPATH=src python -m repro.analysis --ci       # CI gate: exit 1 on
+                                                       # any non-baselined
+                                                       # finding
+
+Suppression: append ``# repro: noqa[RULE-ID]`` (or a blanket
+``# repro: noqa``) to the offending line. Grandfathered findings live in
+``analysis_baseline.json`` at the repo root (regenerate with
+``--write-baseline``); the CI gate fails only on findings *not* in the
+baseline, so new code is held to the rules while documented debt is
+tracked explicitly.
+
+See the "Static analysis" section of the README for the rule catalog.
+"""
+from __future__ import annotations
+
+from .engine import (AnalysisResult, Finding, analyze_repo, default_root,
+                     load_baseline, repo_is_clean, write_baseline)
+from .rules import MODULE_RULES
+from .crossref import PROJECT_RULES
+
+__all__ = [
+    "AnalysisResult",
+    "Finding",
+    "MODULE_RULES",
+    "PROJECT_RULES",
+    "analyze_repo",
+    "default_root",
+    "load_baseline",
+    "repo_is_clean",
+    "write_baseline",
+]

@@ -104,7 +104,10 @@ def random_placement(
     """Random node placement in an area_m x area_m square (paper §IV: 200x200,
     n=6), rejection-sampled to keep nodes at least ``min_sep_m`` apart so the
     capacity matrix stays finite and well-conditioned."""
-    rng = rng or np.random.default_rng(seed)
+    # domain-tagged seed (0x10C ~ "LOC"): placement draws stay independent of
+    # other consumers of the same scalar seed. Callers needing the pre-tag
+    # stream can pass an explicit ``rng`` (the compat path).
+    rng = rng or np.random.default_rng((seed, 0x10C))
     pts: list[np.ndarray] = []
     while len(pts) < n:
         cand = rng.uniform(0.0, area_m, size=2)

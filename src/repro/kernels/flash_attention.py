@@ -13,6 +13,11 @@ grid coordinate by the group size, so kv heads are read in place.
 Block sizes default to (128, 128) — MXU-aligned on the contraction and lane
 dimensions for head_dim >= 128; head_dim is padded to a multiple of 128 by
 the wrapper in ops.py.
+
+Execution mode: ``interpret=None`` (the default) auto-selects per call via
+``_default_interpret`` — compiled Pallas on TPU, interpret mode elsewhere —
+resolved *before* entering jit so the backend probe is never frozen into
+the jit cache.
 """
 from __future__ import annotations
 
@@ -22,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ._backend import _default_interpret
 
 __all__ = ["flash_attention"]
 
@@ -83,16 +90,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
                                              "group", "seq_q", "seq_k",
                                              "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: int = 0, group: int = 1,
-                    bq: int = 128, bk: int = 128,
-                    seq_q: int | None = None, seq_k: int | None = None,
-                    interpret: bool = True) -> jax.Array:
-    """q (BHq, Sq, D), k/v (BHkv, Sk, D) with BHq = BHkv * group.
-
-    Shapes must be pre-padded so Sq % bq == Sk % bk == 0 and D % 128 == 0
-    (ops.flash_attention_gqa does this); ``seq_q``/``seq_k`` are the TRUE
-    lengths — padded rows beyond them are masked in-kernel."""
+def _flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool, window: int, group: int,
+                     bq: int, bk: int, seq_q: int | None, seq_k: int | None,
+                     interpret: bool) -> jax.Array:
     bh, sq, d = q.shape
     sk = k.shape[1]
     nq, nk = sq // bq, sk // bk
@@ -118,3 +119,21 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, group: int = 1,
+                    bq: int = 128, bk: int = 128,
+                    seq_q: int | None = None, seq_k: int | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """q (BHq, Sq, D), k/v (BHkv, Sk, D) with BHq = BHkv * group.
+
+    Shapes must be pre-padded so Sq % bq == Sk % bk == 0 and D % 128 == 0
+    (ops.flash_attention_gqa does this); ``seq_q``/``seq_k`` are the TRUE
+    lengths — padded rows beyond them are masked in-kernel.
+    ``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            group=group, bq=bq, bk=bk, seq_q=seq_q,
+                            seq_k=seq_k, interpret=bool(interpret))

@@ -34,21 +34,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._backend import _default_interpret
+
 __all__ = ["gossip_mix", "gossip_mix_q8"]
 
 _BN = 8 * 128 * 8   # lanes per tile (fp32 VPU tile x 8 rows)
 _SB = 2048          # int8 scale-block lanes (== core.compression._BLOCK)
-
-
-def _default_interpret() -> bool:
-    """Compiled kernels only make sense on a real TPU backend; everywhere
-    else (CPU CI, GPU hosts) fall back to interpret mode. Evaluated per
-    call — it is one cached jax lookup — so a backend attached after the
-    first call changes the answer."""
-    try:
-        return jax.default_backend() != "tpu"
-    except Exception:
-        return True
 
 
 def _kernel(w_ref, b_ref, o_ref):

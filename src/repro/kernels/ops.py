@@ -2,9 +2,10 @@
 
 Each wrapper normalizes layouts (padding to tile multiples, GQA head
 bookkeeping) and exposes the same signature as its ``ref.py`` oracle, so
-tests can swap implementations 1:1. ``interpret=True`` (the default here)
-executes the kernel bodies in Python on CPU — the TPU path is the same call
-with interpret=False.
+tests can swap implementations 1:1. ``interpret=None`` (the default)
+auto-selects per call in each kernel module: compiled Pallas when the
+current ``jax.default_backend()`` is TPU, interpret mode (kernel bodies in
+Python) elsewhere. Pass an explicit bool to override.
 """
 from __future__ import annotations
 
@@ -43,7 +44,7 @@ def gossip_mix_q8(self_buf: jax.Array, q_bufs: jax.Array, scales: jax.Array,
 def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, window: int = 0,
                         bq: int = 128, bk: int = 128,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool | None = None) -> jax.Array:
     """q (B,S,Hq,D), k/v (B,T,Hkv,D) -> (B,S,Hq,D). Pads S/T to block
     multiples and D to 128 lanes, then calls the Pallas kernel."""
     b, s, hq, d = q.shape
@@ -74,7 +75,7 @@ def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def rwkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
           u: jax.Array, chunk: int = 64,
-          interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+          interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
     """r,k,v,w (B,S,H,D); u (H,D) -> (y (B,S,H,D), state (B,H,D,D))."""
     b, s, h, d = r.shape
     chunk = min(chunk, max(8, s))
@@ -97,7 +98,7 @@ def rwkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
 
 
 def rglru(a: jax.Array, binp: jax.Array, h0: jax.Array | None = None,
-          chunk: int = 256, interpret: bool = True) -> jax.Array:
+          chunk: int = 256, interpret: bool | None = None) -> jax.Array:
     """h_t = a_t h_{t-1} + b_t; a, b (B,S,D); h0 (B,D) -> h (B,S,D)."""
     b, s, d = a.shape
     chunk = min(chunk, max(8, s))
@@ -113,7 +114,7 @@ def rglru(a: jax.Array, binp: jax.Array, h0: jax.Array | None = None,
     return out[:, :s].astype(a.dtype)
 
 
-def quantize_int8(x: jax.Array, interpret: bool = True):
+def quantize_int8(x: jax.Array, interpret: bool | None = None):
     """x (R, C) -> (q int8, scales f32 (R, ceil(C/256))); pads R to 8, C to 256."""
     r, c = x.shape
     pr, pc = (-r) % 8, (-c) % 256
@@ -123,7 +124,7 @@ def quantize_int8(x: jax.Array, interpret: bool = True):
 
 
 def dequantize_int8(q: jax.Array, s: jax.Array, dtype=jnp.float32,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     r, c = q.shape
     pr, pc = (-r) % 8, (-c) % 256
     qp = jnp.pad(q, ((0, pr), (0, pc)))

@@ -5,6 +5,11 @@ One pass per (row-block x col-block) tile: reduce |x| over each scale block
 compressed gossip path (core.compression / train.step) as the TPU lowering of
 ``_quantize_rowwise_int8`` — blocked scales rather than whole-row scales, so
 each tile is self-contained in VMEM (no cross-tile reduction).
+
+Execution mode: ``interpret=None`` (the default) auto-selects per call via
+``_default_interpret`` — compiled Pallas on TPU, interpret mode elsewhere —
+resolved *before* entering jit so the backend probe is never frozen into
+the jit cache.
 """
 from __future__ import annotations
 
@@ -13,6 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ._backend import _default_interpret
 
 __all__ = ["quantize_int8", "dequantize_int8"]
 
@@ -38,9 +45,8 @@ def _dq_kernel(q_ref, s_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def quantize_int8(x: jax.Array, interpret: bool = True
-                  ) -> tuple[jax.Array, jax.Array]:
-    """x (R, C), R % 8 == 0, C % 256 == 0 -> (int8 (R, C), f32 (R, C/256))."""
+def _quantize_int8(x: jax.Array, interpret: bool
+                   ) -> tuple[jax.Array, jax.Array]:
     r, c = x.shape
     bc = min(c, _BLOCK * 16)
     grid = (r // _ROWS, c // bc)
@@ -61,9 +67,18 @@ def quantize_int8(x: jax.Array, interpret: bool = True
     return q, s
 
 
+def quantize_int8(x: jax.Array, interpret: bool | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """x (R, C), R % 8 == 0, C % 256 == 0 -> (int8 (R, C), f32 (R, C/256)).
+    ``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _quantize_int8(x, bool(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("dtype", "interpret"))
-def dequantize_int8(q: jax.Array, s: jax.Array, dtype=jnp.float32,
-                    interpret: bool = True) -> jax.Array:
+def _dequantize_int8(q: jax.Array, s: jax.Array, dtype,
+                     interpret: bool) -> jax.Array:
     r, c = q.shape
     bc = min(c, _BLOCK * 16)
     grid = (r // _ROWS, c // bc)
@@ -78,3 +93,11 @@ def dequantize_int8(q: jax.Array, s: jax.Array, dtype=jnp.float32,
         out_shape=jax.ShapeDtypeStruct((r, c), dtype),
         interpret=interpret,
     )(q, s)
+
+
+def dequantize_int8(q: jax.Array, s: jax.Array, dtype=jnp.float32,
+                    interpret: bool | None = None) -> jax.Array:
+    """Inverse of ``quantize_int8``; ``interpret=None`` auto-selects."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _dequantize_int8(q, s, dtype, bool(interpret))

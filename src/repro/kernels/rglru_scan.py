@@ -9,6 +9,11 @@ kernel is bandwidth-bound exactly like the hardware recurrence should be.
 
 Channel blocks are 128-lane aligned; d_rnn (2560 for recurrentgemma-2b)
 splits into 20 blocks of 128.
+
+Execution mode: ``interpret=None`` (the default) auto-selects per call via
+``_default_interpret`` — compiled Pallas on TPU, interpret mode elsewhere —
+resolved *before* entering jit so the backend probe is never frozen into
+the jit cache.
 """
 from __future__ import annotations
 
@@ -18,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ._backend import _default_interpret
 
 __all__ = ["rglru_scan"]
 
@@ -41,11 +48,8 @@ def _kernel(a_ref, b_ref, h0_ref, y_ref, carry_ref, *, chunk: int):
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
-def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
-               chunk: int = 256, bd: int = 128,
-               interpret: bool = True) -> jax.Array:
-    """a, b: (B, S, D) with S % chunk == 0, D % bd == 0; h0 (B, D).
-    Returns h (B, S, D) fp32-accurate in a/b's dtype."""
+def _rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
+                chunk: int, bd: int, interpret: bool) -> jax.Array:
     bsz, s, d = a.shape
     # channel blocks are the MIDDLE grid dim: the fp32 carry persists across
     # the innermost (sequential) seq-chunk dim and is re-initialised per
@@ -65,3 +69,14 @@ def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
         scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
         interpret=interpret,
     )(a, b, h0)
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
+               chunk: int = 256, bd: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    """a, b: (B, S, D) with S % chunk == 0, D % bd == 0; h0 (B, D).
+    Returns h (B, S, D) fp32-accurate in a/b's dtype. ``interpret=None``
+    auto-selects: compiled on TPU, interpret elsewhere."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _rglru_scan(a, b, h0, chunk, bd, bool(interpret))

@@ -12,6 +12,11 @@ y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T) is evaluated chunk-by-chunk:
 
 D = head_size (64 for rwkv6-7b): a (64, 64) fp32 state tile fits VMEM
 trivially; chunk = 64 keeps the intra-chunk (c, c, D) product under 2 MB.
+
+Execution mode: ``interpret=None`` (the default) auto-selects per call via
+``_default_interpret`` — compiled Pallas on TPU, interpret mode elsewhere —
+resolved *before* entering jit so the backend probe is never frozen into
+the jit cache.
 """
 from __future__ import annotations
 
@@ -21,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ._backend import _default_interpret
 
 __all__ = ["rwkv6_scan"]
 
@@ -70,12 +77,9 @@ def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_out_ref, state_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
-               u: jax.Array, chunk: int = 64,
-               interpret: bool = True) -> tuple[jax.Array, jax.Array]:
-    """r,k,v,w: (BH, S, D) fp32 (w in (0,1)); u: (BH, 1, D).
-    Returns (y (BH, S, D), final state (BH, D, D)). S % chunk == 0 required
-    (ops wrapper pads with w=1, k=0)."""
+def _rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                u: jax.Array, chunk: int,
+                interpret: bool) -> tuple[jax.Array, jax.Array]:
     bh, s, d = r.shape
     n_chunks = s // chunk
     lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-12))
@@ -102,3 +106,15 @@ def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
         interpret=interpret,
     )(r, k, v, lw, u)
     return y, s_final
+
+
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, chunk: int = 64,
+               interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """r,k,v,w: (BH, S, D) fp32 (w in (0,1)); u: (BH, 1, D).
+    Returns (y (BH, S, D), final state (BH, D, D)). S % chunk == 0 required
+    (ops wrapper pads with w=1, k=0). ``interpret=None`` auto-selects:
+    compiled on TPU, interpret elsewhere."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _rwkv6_scan(r, k, v, w, u, chunk, bool(interpret))

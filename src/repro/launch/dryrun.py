@@ -23,7 +23,7 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -233,7 +233,11 @@ def _serve_cell(cfg, shape, mesh) -> tuple[Any, tuple, dict]:
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
-             mode: str = "dpsgd", run: Optional[RunConfig] = None) -> dict:
+             mode: str = "dpsgd", run: Optional[RunConfig] = None,
+             clock: Optional[Callable[[], float]] = None) -> dict:
+    """``clock`` is injectable (runtime/fault.py pattern) so lower/compile
+    timings are deterministic under test stubs; the default is monotonic."""
+    clock = clock or time.perf_counter
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     result: dict[str, Any] = {
@@ -248,7 +252,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     run = run or RunConfig(mode=mode)
-    t0 = time.time()
+    t0 = clock()
     try:
         if shape.kind == "train":
             fn, args, extra = _train_cell(cfg, shape, mesh, run)
@@ -257,9 +261,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         result.update(extra)
         with mesh:
             lowered = fn.lower(*args)
-            t1 = time.time()
+            t1 = clock()
             compiled = lowered.compile()
-            t2 = time.time()
+            t2 = clock()
         raxes = replica_axes(mesh)
         n_nodes = int(np.prod([mesh.shape[a] for a in raxes]))
         result.update(_analyze(lowered, compiled, default_group=n_nodes))

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,22 +21,27 @@ __all__ = ["main", "generate"]
 
 
 def generate(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
-             greedy: bool = True) -> dict:
+             greedy: bool = True,
+             clock: Optional[Callable[[], float]] = None) -> dict:
+    """``clock`` is injectable (runtime/fault.py pattern): the default is a
+    monotonic wall timer, tests can pass a deterministic stub so timing
+    fields are reproducible."""
+    clock = clock or time.perf_counter
     api = build(cfg)
     key = jax.random.key(seed)
     params = jax.jit(api.init)(key)
     shape = ShapeConfig("serve", prompt_len, batch, "prefill")
     inputs = api.make_inputs(shape, key, batch_override=batch)
 
-    t0 = time.time()
+    t0 = clock()
     prefill = jax.jit(lambda p, b: api.prefill(p, b, max_len=prompt_len + gen))
     logits, cache = prefill(params, inputs)
     logits.block_until_ready()
-    t_prefill = time.time() - t0
+    t_prefill = clock() - t0
 
     decode = jax.jit(api.decode_step, donate_argnums=(2,))
     tokens = [jnp.argmax(logits, -1).astype(jnp.int32)]
-    t0 = time.time()
+    t0 = clock()
     base = inputs["tokens"].shape[1]
     for i in range(gen - 1):
         logits, cache = decode(params, tokens[-1], cache, jnp.asarray(base + i))
@@ -46,7 +52,7 @@ def generate(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
             tokens.append(jax.random.categorical(sub, logits).astype(jnp.int32))
     out = jnp.stack(tokens, axis=1)
     out.block_until_ready()
-    t_decode = time.time() - t0
+    t_decode = clock() - t0
     return {"tokens": out, "prefill_s": t_prefill, "decode_s": t_decode,
             "tok_per_s": batch * (gen - 1) / max(t_decode, 1e-9)}
 

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -58,7 +59,11 @@ def _mesh(nodes: int, tp: int):
 def train_loop(cfg, run: RunConfig, *, nodes: int, tp: int, steps: int,
                batch_per_node: int, seq_len: int, ckpt_dir: str | None,
                ckpt_every: int = 50, fail_at: int = -1, fail_node: int = 0,
-               log_every: int = 10, resume: bool = False) -> dict:
+               log_every: int = 10, resume: bool = False,
+               clock: Callable[[], float] | None = None) -> dict:
+    # injectable wall timer (runtime/fault.py pattern): the logged `wall_s`
+    # column is deterministic when a test stubs `clock`
+    clock = clock or time.perf_counter
     api = build(cfg)
     mesh = _mesh(nodes, tp)
     n_nodes = nodes if run.mode == "dpsgd" else 1
@@ -109,7 +114,7 @@ def train_loop(cfg, run: RunConfig, *, nodes: int, tp: int, steps: int,
     jit_step = jax.jit(step_fn, donate_argnums=(0,))
     shape = ShapeConfig("train", seq_len, global_batch, "train")
     metrics_log: list[dict] = []
-    t_wall = time.time()
+    t_wall = clock()
 
     k = start
     while k < steps:
@@ -146,7 +151,7 @@ def train_loop(cfg, run: RunConfig, *, nodes: int, tp: int, steps: int,
 
         if k % log_every == 0 or k == steps:
             loss = float(metrics["loss"])
-            dt = time.time() - t_wall
+            dt = clock() - t_wall
             metrics_log.append({"step": k, "loss": loss, "wall_s": dt})
             print(f"step {k:5d} loss {loss:.4f} wall {dt:7.1f}s", flush=True)
         if mgr and k % ckpt_every == 0:

@@ -80,7 +80,9 @@ def straggler_penalty(degree: int, n: int, slow_prob: float,
     node independently runs ``slow_factor``x slower with prob ``slow_prob``.
     Gossip waits for the max over each node's (self + ``ring_neighbors``);
     all-reduce waits for the global max. Returned values are fleet means."""
-    rng = np.random.default_rng(seed)
+    # domain-tagged seed: keeps the straggler draw stream independent of any
+    # other consumer handed the same scalar seed (0x57A6 ~ "STRAG")
+    rng = np.random.default_rng((seed, 0x57A6))
     times = np.where(rng.random((trials, n)) < slow_prob, slow_factor, 1.0)
     allreduce = times.max(axis=1).mean()
     neigh = ring_neighbors(n, degree)

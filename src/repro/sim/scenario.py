@@ -418,13 +418,14 @@ register(ScenarioConfig(
 register(ScenarioConfig(
     # correlated crash/recover + the heartbeat recovery loop: a crash event
     # takes the victim plus ~30 % of the other nodes down for 5 rounds;
-    # missed heartbeats trip the controller after ~2 round-times, the
+    # missed heartbeats trip the controller after ~2 round-times (rounds on
+    # the pinned placement stream run 0.03-0.1 simulated seconds), the
     # survivors replan (with the common-rate fallback if their graph
     # disconnects), and crashed nodes rejoin with stale parameters.
     name="fault_crash",
     replan_every_rounds=8,
     faults=FaultParams(crash_p=0.10, crash_corr=0.3, crash_down_rounds=5,
-                       heartbeat_timeout_s=1.0),
+                       heartbeat_timeout_s=0.15),
 ))
 
 register(ScenarioConfig(

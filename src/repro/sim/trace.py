@@ -734,12 +734,15 @@ def simulate_dpsgd_cnn(
     n_test: int = 300,
     ds=None,
     measure_compute: bool = False,
+    compute_clock: Optional[Callable[[], float]] = None,
 ) -> tuple[SimTrace, dict]:
     """Run the paper's CNN under a scenario; returns ``(trace, node_params)``.
 
     Accuracy points in the trace are stamped with **simulated** wall-clock.
     Per-round compute time is ``cfg.compute_s_per_round`` unless
-    ``measure_compute`` (then host-measured, like the paper's §IV-A method).
+    ``measure_compute`` (then host-measured via ``compute_clock``, default a
+    monotonic timer — injectable so tests can pin the measured path, like
+    the paper's §IV-A method).
     Churn events elastically reshape the node-stacked state via
     ``checkpoint.reshape_nodes`` (survivor rows kept, replacements at the
     survivor mean) — here we shrink, so survivor rows only.
@@ -753,6 +756,7 @@ def simulate_dpsgd_cnn(
     from ..data import SyntheticFashion, node_splits
     from ..models import cnn
 
+    compute_clock = compute_clock or time.perf_counter
     if abs(cfg.model_bits - cnn.MODEL_BITS) > 0.5:
         cfg = cfg.replace(model_bits=float(cnn.MODEL_BITS))
     if cfg.payload.mode == "auto":
@@ -805,7 +809,7 @@ def simulate_dpsgd_cnn(
                 [state["shards"][i][1][idx[i]] for i in range(n_live)]))}
         active = (jnp.ones(n_live, dtype=bool) if ctx.active is None
                   else jnp.asarray(ctx.active))
-        t0 = time.perf_counter()
+        t0 = compute_clock()
         if compressed:
             state["params"], state["residuals"], losses = cstep(
                 state["params"], b, jnp.asarray(ctx.w_eff),
@@ -819,7 +823,7 @@ def simulate_dpsgd_cnn(
         jax.block_until_ready(state["params"])
         out = {"loss": float(losses.mean())}
         if measure_compute:
-            out["compute_s"] = time.perf_counter() - t0
+            out["compute_s"] = compute_clock() - t0
         if (ctx.round + 1) % cfg.eval_every_rounds == 0 \
                 or ctx.round + 1 == n_rounds:
             node0 = jax.tree.map(lambda p: p[0], state["params"])

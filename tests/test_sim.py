@@ -292,7 +292,9 @@ def test_training_accuracy_vs_sim_time_static():
 def test_training_survives_churn_reshape():
     import jax
 
-    cfg = get_scenario("churn", churn_rate_per_s=0.4, solver="greedy",
+    # rate tuned to the pinned placement stream: >= 2 failures inside this
+    # horizon so the reshape path is actually exercised
+    cfg = get_scenario("churn", churn_rate_per_s=1.5, solver="greedy",
                        compute_s_per_round=0.05, eval_every_rounds=2)
     trace, params = simulate_dpsgd_cnn(cfg, epochs=1, n_train=600, n_test=150)
     s = trace.summary()
