@@ -12,6 +12,11 @@ Measures (median + min over several runs each):
   chunked channel + batched solvers): rounds/s and packets/s.
 * ``sweep``   — the ``sim.trace.sweep`` driver over a multi-seed,
   multi-scenario grid (Monte-Carlo style), rounds/s aggregate.
+* ``n_sweep`` — large-n scaling: an Algorithm 2 replan (certified
+  local-candidate sweep above ``ITERATIVE_MIN_N``) plus a 30-round
+  scan-engine fading trace at n = 16/64/256/1024 (``--quick`` stops at
+  256): solver time, rounds/s, lambda of the chosen plan, and whether the
+  winner was certified by exact ``spectral_lambda``.
 * ``mac_compare`` — TDM vs random access head to head: the paper's CNN
   trained through both MAC planes in one ``train_cnn_on_traces`` call,
   emitting the accuracy-vs-**simulated-wall-clock** traces (the axis the
@@ -49,6 +54,8 @@ Cross-checks (``checks`` in the JSON, process exits 1 on any failure):
   plane's acceptance criterion);
 * a fast-MAC and a reference-MAC simulator run of the same scenario produce
   identical round durations / retx / outage / delivered fractions;
+* ``checks.scale`` — at every ``n_sweep`` size the winning plan's lambda is
+  the exact eig of its W (certify-on-winner) and clears the density target;
 * the static scenario still reproduces Eq. 3 to 1e-9 relative — and its
   int8 variant reproduces Eq. 3 *at the compressed wire bits* to 1e-9.
 
@@ -471,6 +478,59 @@ def check_sched(quick: bool) -> dict:
     return {"solve_schedule": bool(ok)}
 
 
+def bench_n_sweep(quick: bool) -> dict:
+    """Large-n scaling of the whole wireless plane: at each n, one
+    Algorithm 2 replan (above ``ITERATIVE_MIN_N`` that's the certified
+    local-candidate sweep — power-iteration screen, exact eig only on the
+    winner) and one scan-engine fading trace (``sim.jit_trace``: the round
+    loop as a single compiled program). Rayleigh-only fading — the scan
+    plane's stateless per-block RNG has no AR(1) shadowing. Reported per
+    size: solver time, trace rounds/s, the plan's lambda, and whether the
+    winner is ``certified`` (returned lambda == exact ``spectral_lambda``
+    of the returned W — the contract ``checks.scale`` gates on)."""
+    from repro.core.topology import spectral_lambda
+    from repro.sim.jit_trace import precompute_trace_scan
+
+    ns = (16, 64, 256) if quick else (16, 64, 256, 1024)
+    rounds = 10 if quick else 30
+    out: dict = {"rounds": rounds, "sizes": {}}
+    for n in ns:
+        cfg = get_scenario("fading", n_nodes=n,
+                           **{"fading.shadowing_sigma_db": 0.0})
+        t0 = time.perf_counter()
+        sim = WirelessSimulator(cfg)           # __init__ runs the replan
+        t_solver = time.perf_counter() - t0
+        sol = sim.solution
+        t0 = time.perf_counter()
+        trace = precompute_trace_scan(cfg, rounds, sim=sim).trace
+        t_trace = time.perf_counter() - t0
+        s = trace.summary()
+        out["sizes"][str(n)] = {
+            "t_solver_s": t_solver,
+            "t_trace_s": t_trace,
+            "rounds_per_s": rounds / t_trace,
+            "lambda": float(sol.lam),
+            "lambda_target": cfg.lambda_target,
+            "feasible": bool(sol.feasible),
+            "certified": bool(sol.lam == spectral_lambda(sol.w)),
+            "outage_rate": s["outage_rate"],
+        }
+    return out
+
+
+def check_scale(n_sweep: dict) -> dict:
+    """Gate on correctness, not timing: at every n the winning plan's
+    lambda must be the exact eig of its W (certify-on-winner) and the plan
+    must clear the density target."""
+    sizes = n_sweep["sizes"]
+    return {
+        "certified": {n: v["certified"] for n, v in sizes.items()},
+        "feasible": {n: v["feasible"] for n, v in sizes.items()},
+        "all_certified": bool(all(v["certified"] for v in sizes.values())),
+        "all_feasible": bool(all(v["feasible"] for v in sizes.values())),
+    }
+
+
 def bench_sweep(quick: bool) -> dict:
     seeds = range(2) if quick else range(5)
     configs = [get_scenario(name, seed=s, solver="greedy")
@@ -507,6 +567,7 @@ def main(argv=None) -> int:
         "solver": bench_solver(reps),
         "sim": bench_sim(reps, rounds),
         "sweep": bench_sweep(args.quick),
+        "n_sweep": bench_n_sweep(args.quick),
         "mac_compare": bench_mac_compare(args.quick),
         "compression_compare": bench_compression_compare(args.quick),
         "policy_compare": bench_policy_compare(args.quick),
@@ -521,6 +582,7 @@ def main(argv=None) -> int:
     }
     result["checks"]["fault"] = check_fault(result["fault_compare"],
                                             args.quick)
+    result["checks"]["scale"] = check_scale(result["n_sweep"])
     checks = result["checks"]
     failed = (not result["solver"]["match"]
               or not all(checks["solver"].values())
@@ -532,7 +594,9 @@ def main(argv=None) -> int:
               or not all(v for k, v in checks["mac"].items()
                          if isinstance(v, bool))
               or not all(v for k, v in checks["fault"].items()
-                         if isinstance(v, bool)))
+                         if isinstance(v, bool))
+              or not checks["scale"]["all_certified"]
+              or not checks["scale"]["all_feasible"])
     result["ok"] = not failed
 
     text = json.dumps(result, indent=2)

@@ -49,6 +49,7 @@ Usage:
     PYTHONPATH=src python -m examples.sim_scenarios --train fading
     PYTHONPATH=src python -m examples.sim_scenarios --train compressed_int8
     PYTHONPATH=src python -m examples.sim_scenarios --margin-sweep
+    PYTHONPATH=src python -m examples.sim_scenarios --scale 384 --rounds 8
     PYTHONPATH=src python -m examples.sim_scenarios --train-sweep fading --seeds 4
     PYTHONPATH=src python -m examples.sim_scenarios --mac-compare
     PYTHONPATH=src python -m examples.sim_scenarios --policy-compare
@@ -183,6 +184,35 @@ def train_sweep(name: str, seeds: int, epochs: int, solver: str,
           f"min {final.min():.4f} max {final.max():.4f}")
 
 
+def scale(n: int, rounds: int) -> None:
+    """Large-n smoke: one Algorithm 2 replan (the certified local-candidate
+    sweep above ``core.topology.ITERATIVE_MIN_N``) plus a jitted scan-engine
+    fading trace at n nodes, Rayleigh-only (the scan plane's stateless
+    per-block RNG carries no AR(1) shadowing)."""
+    import time
+
+    from repro.core.topology import spectral_lambda
+    from repro.sim.jit_trace import precompute_trace_scan
+
+    cfg = get_scenario("fading", n_nodes=n,
+                       **{"fading.shadowing_sigma_db": 0.0})
+    t0 = time.perf_counter()
+    sim = WirelessSimulator(cfg)
+    t_plan = time.perf_counter() - t0
+    sol = sim.solution
+    certified = sol.lam == spectral_lambda(sol.w)
+    t0 = time.perf_counter()
+    tr = precompute_trace_scan(cfg, rounds, sim=sim)
+    t_trace = time.perf_counter() - t0
+    s = tr.trace.summary()
+    print(f"# n={n}: plan {t_plan:.2f}s (lambda {sol.lam:.4f} <= "
+          f"{cfg.lambda_target} target, feasible={sol.feasible}, "
+          f"certified={certified}), {rounds} rounds in {t_trace:.2f}s "
+          f"({rounds / t_trace:.2f} rounds/s), outage "
+          f"{s['outage_rate']:.1%}, comm {s['total_comm_s']:.1f}s sim")
+    assert certified and sol.feasible, "large-n plan not certified-feasible"
+
+
 def margin_sweep(rounds: int, solver: str, payload: str | None = None) -> None:
     print("fading_margin_bps,feasible,outage_rate,retx_packets,comm_s")
     for margin in (0.0, 5e5, 1e6, 2e6, 3e6, 4e6):
@@ -206,6 +236,9 @@ def main(argv: list[str] | None = None) -> None:
                       choices=list_scenarios(),
                       help="Monte-Carlo family via the batched scan path")
     mode.add_argument("--margin-sweep", action="store_true")
+    mode.add_argument("--scale", type=int, metavar="N",
+                      help="large-n smoke: certified replan + scan-engine "
+                           "fading trace at N nodes (Rayleigh-only)")
     mode.add_argument("--mac-compare", action="store_true",
                       help="TDM vs random-access accuracy-vs-sim-time")
     mode.add_argument("--policy-compare", action="store_true",
@@ -237,6 +270,8 @@ def main(argv: list[str] | None = None) -> None:
     elif args.train_sweep:
         train_sweep(args.train_sweep, args.seeds, args.epochs, args.solver,
                     args.payload)
+    elif args.scale:
+        scale(args.scale, args.rounds)
     elif args.margin_sweep:
         margin_sweep(args.rounds, args.solver, args.payload)
     elif args.mac_compare:

@@ -469,6 +469,44 @@ def rule_dtype001_float64_into_jax(mod: ModuleInfo) -> list[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# DTYPE002 — jax eigensolves outside an enable_x64 scope
+# ---------------------------------------------------------------------------
+
+_JAX_EIG = {"jax.numpy.linalg.eig", "jax.numpy.linalg.eigvals",
+            "jax.numpy.linalg.eigh", "jax.numpy.linalg.eigvalsh"}
+
+
+def rule_dtype002_eig_needs_x64(mod: ModuleInfo) -> list[Finding]:
+    """Jax eigensolves must sit lexically inside a ``with
+    jax.experimental.enable_x64():`` block: jax defaults to f32, so
+    ``jnp.linalg.eig*`` on a float64 capacity/W matrix silently downgrades
+    and the paper's lambda loses ~4 digits against the numpy plane (the
+    ``rate_opt`` ``backend="jax"`` bug). The scope must be lexical — tracing
+    under it is what keeps the compiled eig in float64."""
+    ctx = _Ctx(mod)
+    covered: set[int] = set()
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.With):
+            continue
+        if any(isinstance(item.context_expr, ast.Call)
+               and ctx.canon(item.context_expr.func)
+               == "jax.experimental.enable_x64"
+               for item in node.items):
+            covered.update(id(n) for n in ast.walk(node))
+    out = []
+    for node in _walk_calls(mod.tree):
+        name = ctx.canon(node.func)
+        if name in _JAX_EIG and id(node) not in covered:
+            out.append(ctx.finding(
+                "DTYPE002", node,
+                f"`{name[10:]}` outside an `enable_x64()` scope - jax "
+                "eigensolves run f32 by default and silently downgrade the "
+                "spectral lambda; wrap the traced region in "
+                "`with jax.experimental.enable_x64():`"))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # PAL001 / PAL002 — Pallas kernel lint
 # ---------------------------------------------------------------------------
 
@@ -601,6 +639,7 @@ MODULE_RULES = [
     rule_jit002_host_sync,
     rule_jit003_python_loops,
     rule_dtype001_float64_into_jax,
+    rule_dtype002_eig_needs_x64,
     rule_pal001_interpret_routing,
     rule_pal002_fp32_accumulate,
 ]
@@ -616,6 +655,8 @@ RULE_CATALOG = {
               "code",
     "JIT003": "Python round/node loop in a module advertising jitted paths",
     "DTYPE001": "float64 flowing into jax arrays",
+    "DTYPE002": "jnp.linalg.eig* outside a jax.experimental.enable_x64 "
+                "scope",
     "PAL001": "Pallas interpret-mode not routed through _default_interpret",
     "PAL002": "sub-fp32 accumulation inside a Pallas kernel body",
     "PAR001": "public *_batch/solve_* symbol with no *_reference sibling",

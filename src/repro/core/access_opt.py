@@ -54,12 +54,19 @@ import numpy as np
 
 from .channel import snr_from_capacity
 from .comm_model import tdm_time_s
-from .topology import (adjacency_from_rates, adjacency_from_rates_batch,
-                       paper_w, spectral_lambda, spectral_lambda_batch)
+from .topology import (ITERATIVE_MIN_N, adjacency_from_rates,
+                       adjacency_from_rates_batch, paper_w, spectral_lambda,
+                       spectral_lambda_batch, spectral_lambda_iter_batch)
 
 __all__ = ["AccessSolution", "JointAccessSolution", "default_p_grid",
            "expected_round_s", "solve_access", "solve_access_reference",
            "solve_access_joint", "solve_access_joint_reference"]
+
+# Candidate stacks are scored in chunks of at most this many matrix elements
+# so a large-n sweep never materializes the full (B, n, n) adjacency stack.
+_CHUNK_ELEMS = 2 ** 23
+# Exact-eig certifications spent walking the pre-screened ranking at large n.
+_CERT_BUDGET = 16
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,7 +158,14 @@ def _rate_candidates(capacity: np.ndarray) -> np.ndarray:
     construction — duplicate-retaining descending row sort, ``min(k-1,
     size-1)`` clamp, isolated rows falling back to the global max — so the
     two MAC planners search the same rate family; capacity ties repeating a
-    rate across consecutive k are harmless (identical score, first kept)."""
+    rate across consecutive k are harmless (identical score, first kept).
+
+    Above ``topology.ITERATIVE_MIN_N`` nodes both families are pruned to
+    scalable grids — the log-spaced ``rate_opt.k_grid`` neighbor counts and
+    a ``rate_opt.prune_descending`` subsample of the distinct capacities
+    (which would otherwise grow as ~n^2 rows) — keeping the construction
+    local and the stack size bounded; at or below it the full families are
+    built unchanged."""
     capacity = np.asarray(capacity, dtype=np.float64)
     n = capacity.shape[0]
     finite = capacity[np.isfinite(capacity) & (capacity > 0)]
@@ -163,11 +177,20 @@ def _rate_candidates(capacity: np.ndarray) -> np.ndarray:
         row = np.sort(capacity[i][np.isfinite(capacity[i])
                                   & (capacity[i] > 0)])[::-1]
         rows.append(row if row.size else np.array([fallback]))
-    knear = np.empty((n - 1, n))
-    for k in range(1, n):
-        for i in range(n):
-            knear[k - 1, i] = rows[i][min(k - 1, rows[i].size - 1)]
-    vals = np.unique(finite)[::-1]
+    if n > ITERATIVE_MIN_N:
+        from .rate_opt import k_grid, prune_descending
+        ks = k_grid(n)
+        knear = np.empty((ks.size, n))
+        for r, k in enumerate(ks):
+            for i in range(n):
+                knear[r, i] = rows[i][min(int(k) - 1, rows[i].size - 1)]
+        vals = prune_descending(np.unique(finite)[::-1])
+    else:
+        knear = np.empty((n - 1, n))
+        for k in range(1, n):
+            for i in range(n):
+                knear[k - 1, i] = rows[i][min(k - 1, rows[i].size - 1)]
+        vals = np.unique(finite)[::-1]
     common = np.repeat(vals[:, None], n, axis=1)
     return np.concatenate([knear, common], axis=0)
 
@@ -214,21 +237,39 @@ def solve_access(
     rate stack, then vectorized (candidates x p-grid) surrogate algebra.
     Returns the feasible candidate with minimal expected round time (ties to
     the earliest candidate / smallest grid p — the reference's scan order);
-    when nothing is feasible, the candidate with minimal lambda."""
+    when nothing is feasible, the candidate with minimal lambda.
+
+    The candidate stack is processed in memory-bounded chunks (per-item
+    results are unchanged — the batched eig dispatches per matrix). Above
+    ``topology.ITERATIVE_MIN_N`` nodes the per-candidate lambda comes from
+    the power-iteration pre-screen instead of exact eig, and the pick is
+    **certified**: candidates are walked in ascending expected-round-time
+    order and the first whose exact ``spectral_lambda`` (recomputed by
+    ``_evaluate_access``) clears the target wins, falling back to the
+    smallest-estimate candidates when the screen misjudged."""
     capacity = np.asarray(capacity, dtype=np.float64)
     n = capacity.shape[0]
     grid = default_p_grid(n) if p_grid is None else np.asarray(p_grid)
     rates = _rate_candidates(capacity)                       # (B, n)
     b = rates.shape[0]
-
-    a = adjacency_from_rates_batch(capacity, rates)
-    lams = spectral_lambda_batch(paper_w(a))
-    intended = a.astype(bool)
-    intended[:, np.arange(n), np.arange(n)] = False
-    n_links = intended.sum(axis=(1, 2)).astype(np.int64)
+    large = n > ITERATIVE_MIN_N
     in_range = _in_range(capacity, bandwidth_hz, interference_min_snr)
 
-    exps = np.array([_exponent(intended[i], in_range) for i in range(b)])
+    lams = np.empty(b)
+    n_links = np.empty(b, dtype=np.int64)
+    exps = np.empty(b, dtype=np.int64)
+    step = max(1, _CHUNK_ELEMS // (n * n))
+    for s in range(0, b, step):
+        sl = slice(s, min(s + step, b))
+        a = adjacency_from_rates_batch(capacity, rates[sl])
+        w = paper_w(a)
+        lams[sl] = (spectral_lambda_iter_batch(w) if large
+                    else spectral_lambda_batch(w))
+        intended = a.astype(bool)
+        intended[:, np.arange(n), np.arange(n)] = False
+        n_links[sl] = intended.sum(axis=(1, 2))
+        for j in range(intended.shape[0]):
+            exps[s + j] = _exponent(intended[j], in_range)
     # best uniform p per candidate: maximize q = p (1-p)^e over the grid
     qs = grid[None, :] * (1.0 - grid[None, :]) ** exps[:, None]   # (B, P)
     p_idx = np.argmax(qs, axis=1)                 # first max == strict > scan
@@ -238,14 +279,38 @@ def solve_access(
     # so the batched ranking agrees with the reference to the last bit
     t = slot * (h / qs[np.arange(b), p_idx])
 
+    def _score(idx: int) -> AccessSolution:
+        return _evaluate_access(capacity, rates[idx],
+                                float(grid[p_idx[idx]]), model_bits,
+                                lambda_target, bandwidth_hz,
+                                interference_min_snr)
+
+    if large:
+        order = np.argsort(t, kind="stable")
+        screened = order[lams[order] <= lambda_target + 1e-9]
+        certs = 0
+        for idx in screened:
+            if certs >= _CERT_BUDGET:
+                break
+            certs += 1
+            sol = _score(int(idx))
+            if sol.feasible:
+                return sol
+        for idx in np.argsort(lams, kind="stable"):
+            if certs >= 2 * _CERT_BUDGET:
+                break
+            certs += 1
+            sol = _score(int(idx))
+            if sol.feasible:
+                return sol
+        return _score(int(np.argmin(lams)))
+
     feas = lams <= lambda_target + 1e-12
     if feas.any():
         best = int(np.argmin(np.where(feas, t, np.inf)))
     else:
         best = int(np.argmin(lams))
-    return _evaluate_access(capacity, rates[best], float(grid[p_idx[best]]),
-                            model_bits, lambda_target, bandwidth_hz,
-                            interference_min_snr)
+    return _score(best)
 
 
 def solve_access_reference(

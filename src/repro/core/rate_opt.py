@@ -31,15 +31,15 @@ all nodes run it independently and arrive at the same R (no extra exchange).
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from collections import OrderedDict
 from typing import Callable, Literal, Optional
 
 import numpy as np
 
 from .comm_model import tdm_time_batch_s, tdm_time_s
-from .topology import (adjacency_from_rates, adjacency_from_rates_batch,
-                       paper_w, spectral_lambda, spectral_lambda_batch)
+from .topology import (ITERATIVE_MIN_N, adjacency_from_rates,
+                       adjacency_from_rates_batch, paper_w, spectral_lambda,
+                       spectral_lambda_batch, spectral_lambda_iter_batch)
 
 __all__ = ["RateSolution", "JointRateSolution", "solve_bruteforce",
            "solve_common_rate", "solve_k_nearest",
@@ -47,7 +47,21 @@ __all__ = ["RateSolution", "JointRateSolution", "solve_bruteforce",
            "candidate_rates", "payload_wire_bits",
            "solve_bruteforce_reference", "solve_common_rate_reference",
            "solve_k_nearest_reference", "solve_greedy_reference",
-           "evaluate_rates_batch", "clear_candidate_cache"]
+           "evaluate_rates_batch", "clear_candidate_cache",
+           "certified_best", "k_grid", "prune_descending",
+           "MAX_BRUTEFORCE_CANDIDATES"]
+
+# Hard cap on the brute-force combinatorial grid: above this many combos the
+# enumeration can neither be ranked (B floats) nor walked in reasonable time,
+# so both brute-force paths raise instead of silently hanging.
+MAX_BRUTEFORCE_CANDIDATES = 2_000_000
+
+# Large-n sweep structure (engaged only above topology.ITERATIVE_MIN_N, so
+# every small-n output stays bit-identical to the pinned references):
+_K_GRID_MAX = 24          # k-nearest sweep: log-spaced ks instead of 1..n-1
+_COMMON_GRID_MAX = 48     # common-rate sweep: subsampled distinct capacities
+_CERT_BUDGET = 16         # exact-eig certifications per sweep before fallback
+_CHUNK_ELEMS = 2**23      # max floats per (B, n, n) candidate chunk (~64 MB)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,23 +177,30 @@ _JAX_LAM_FN = None
 
 
 def _spectral_lambda_batch_jax(w: np.ndarray) -> np.ndarray:
-    """vmap+jit eigenvalue pass for large batches. Approximate relative to
-    the numpy path (different eig kernels, default f32 unless x64 is on);
-    asymmetric eig is CPU-only in jax, so failures fall back to numpy."""
+    """vmap+jit eigenvalue pass for large batches, run under a **local x64
+    scope** (``jax.experimental.enable_x64``) so the eigensolve really is
+    float64: without it jax silently truncates the float64 candidate stack
+    to f32 and the trailing ``asarray(..., float64)`` cast only launders the
+    low-precision result. Still approximate relative to the numpy path
+    (different eig kernels — LAPACK via XLA vs LAPACK via numpy — agreement
+    is pinned to ~1e-9 in tests/test_scale.py, not bit-exact); asymmetric
+    eig is CPU-only in jax, so failures fall back to numpy."""
     global _JAX_LAM_FN
     try:
         import jax
         import jax.numpy as jnp
+        from jax.experimental import enable_x64
 
-        if _JAX_LAM_FN is None:
-            def _one(m):
-                e = jnp.linalg.eigvals(m)
-                mags = jnp.abs(e)
-                drop = jnp.argmin(jnp.abs(e - 1.0))
-                return jnp.max(mags.at[drop].set(-jnp.inf))
+        with enable_x64():
+            if _JAX_LAM_FN is None:
+                def _one(m):
+                    e = jnp.linalg.eigvals(m)
+                    mags = jnp.abs(e)
+                    drop = jnp.argmin(jnp.abs(e - 1.0))
+                    return jnp.max(mags.at[drop].set(-jnp.inf))
 
-            _JAX_LAM_FN = jax.jit(jax.vmap(_one))
-        return np.asarray(_JAX_LAM_FN(w), dtype=np.float64)
+                _JAX_LAM_FN = jax.jit(jax.vmap(_one))
+            return np.asarray(_JAX_LAM_FN(w), dtype=np.float64)
     except Exception:
         return spectral_lambda_batch(w)
 
@@ -209,6 +230,97 @@ def evaluate_rates_batch(
     return t, lam, lam <= lambda_target + 1e-12
 
 
+# ---------------------------------------------------------------------------
+# Large-n sweeps: pruned candidate grids + iterative pre-screen with exact
+# certification of the winner (see topology.spectral_lambda_iter_batch)
+# ---------------------------------------------------------------------------
+
+def k_grid(n: int, max_candidates: int = _K_GRID_MAX) -> np.ndarray:
+    """Neighbor counts the k-nearest sweep visits: the full 1..n-1 range up
+    to ``max_candidates`` values, else a log-spaced subsample that always
+    keeps the sparsest (k=1) and densest (k=n-1) ends."""
+    if n - 1 <= max_candidates:
+        return np.arange(1, n)
+    ks = np.unique(np.round(np.geomspace(1, n - 1, max_candidates))
+                   .astype(np.int64))
+    return ks
+
+
+def prune_descending(vals: np.ndarray,
+                     max_candidates: int = _COMMON_GRID_MAX) -> np.ndarray:
+    """Subsample a descending candidate array to ``max_candidates`` entries
+    (endpoints always kept — the fastest and the densest rate survive)."""
+    if vals.size <= max_candidates:
+        return vals
+    idx = np.unique(np.round(
+        np.linspace(0, vals.size - 1, max_candidates)).astype(np.int64))
+    return vals[idx]
+
+
+def _lambda_iter_chunked(capacity: np.ndarray, rates: np.ndarray,
+                         reception_based: bool, iters: int) -> np.ndarray:
+    """Power-iteration lambda estimates for a (B, n) rate stack, chunked so
+    the (chunk, n, n) adjacency/W tensors stay within ``_CHUNK_ELEMS``."""
+    b, n = rates.shape
+    out = np.empty(b)
+    step = max(1, _CHUNK_ELEMS // (n * n))
+    for start in range(0, b, step):
+        sl = slice(start, min(start + step, b))
+        a = adjacency_from_rates_batch(capacity, rates[sl],
+                                       reception_based=reception_based)
+        out[sl] = spectral_lambda_iter_batch(paper_w(a), iters=iters)
+    return out
+
+
+def certified_best(
+    capacity: np.ndarray,
+    rates: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    reception_based: bool = False,
+    iters: int = 64,
+    cert_budget: int = _CERT_BUDGET,
+) -> RateSolution:
+    """Select from a (B, n) candidate rate stack with the iterative
+    pre-screen, certifying picks with the exact ``spectral_lambda``.
+
+    Candidates are ranked by their (cheap) Eq. 3 time; those whose estimated
+    lambda clears the target are certified in ascending-time order with a
+    full ``_evaluate`` (exact eig), and the first certified-feasible one
+    wins — so the returned solution's ``lam`` is always the exact spectral
+    measure of its W, never the estimate. If the estimate misjudged every
+    pre-screened candidate (or none pre-screened feasible), the walk falls
+    back to certifying the smallest-estimate candidates, and finally to the
+    densest attempt — mirroring the small-n solvers' infeasible fallback.
+    """
+    rates = np.atleast_2d(np.asarray(rates, dtype=np.float64))
+    t = tdm_time_batch_s(model_bits, rates)
+    lam_est = _lambda_iter_chunked(capacity, rates, reception_based, iters)
+    order = np.argsort(t, kind="stable")
+    screened = order[lam_est[order] <= lambda_target + 1e-9]
+    certs = 0
+    for idx in screened:
+        if certs >= cert_budget:
+            break
+        certs += 1
+        sol = _evaluate(capacity, rates[idx], model_bits, lambda_target,
+                        reception_based)
+        if sol.feasible:
+            return sol
+    # estimate misjudged the screened set: try the smallest-estimate picks
+    for idx in np.argsort(lam_est, kind="stable"):
+        if certs >= 2 * cert_budget:
+            break
+        certs += 1
+        sol = _evaluate(capacity, rates[idx], model_bits, lambda_target,
+                        reception_based)
+        if sol.feasible:
+            return sol
+    # nothing certifies: report the densest attempt (smallest estimate)
+    return _evaluate(capacity, rates[int(np.argmin(lam_est))], model_bits,
+                     lambda_target, reception_based)
+
+
 def _combo_rates(per_node: list[np.ndarray], flat_idx: np.ndarray) -> np.ndarray:
     """Materialize candidate combos ``flat_idx`` (itertools.product order —
     the last node's candidate varies fastest) as a (len(flat_idx), n) rate
@@ -229,6 +341,7 @@ def solve_bruteforce(
     max_nodes: int = 8,
     chunk: int = 4096,
     backend: Literal["numpy", "jax"] = "numpy",
+    max_candidates: int = MAX_BRUTEFORCE_CANDIDATES,
 ) -> RateSolution:
     """Algorithm 2, batched: enumerate every per-row capacity pick as one
     (B, n) rate matrix, rank all combos by their (cheap) Eq. 3 time, then
@@ -242,7 +355,14 @@ def solve_bruteforce(
     if n > max_nodes:
         raise ValueError(f"brute force capped at n={max_nodes}; use solve() for n={n}")
     per_node = _per_node_candidates(capacity)
-    total = int(np.prod([p.size for p in per_node]))
+    total = 1
+    for p in per_node:
+        total *= p.size                     # exact (python int, no overflow)
+    if total > max_candidates:
+        raise ValueError(
+            f"brute force grid has {total} candidate combos "
+            f"(> max_candidates={max_candidates}); use solve_k_nearest / "
+            f"solve('auto')'s local sweep instead")
 
     t_all = np.empty(total)
     for start in range(0, total, chunk):
@@ -273,11 +393,23 @@ def solve_common_rate(
 ) -> RateSolution:
     """All nodes share a single rate: evaluate every distinct capacity in one
     batched pass and return the fastest feasible one (the reference scans
-    descending and stops at the first feasible — same pick)."""
+    descending and stops at the first feasible — same pick).
+
+    Above ``topology.ITERATIVE_MIN_N`` nodes the sweep switches to the
+    scalable path: the distinct-capacity grid (up to ~n^2 entries) is
+    subsampled to ``prune_descending``'s budget and ranked with the
+    power-iteration pre-screen, and the winner is certified by an exact
+    ``spectral_lambda`` (``certified_best``). At or below the threshold the
+    exact path runs unchanged (bit-identical to the reference)."""
     vals = np.unique(capacity[np.isfinite(capacity) & (capacity > 0)])[::-1]
     if not vals.size:
         raise ValueError("capacity matrix has no positive finite entries")
     n = capacity.shape[0]
+    if n > ITERATIVE_MIN_N:
+        vals = prune_descending(vals)
+        rates = np.repeat(vals[:, None], n, axis=1)
+        return certified_best(capacity, rates, model_bits, lambda_target,
+                              reception_based)
     rates = np.repeat(vals[:, None], n, axis=1)          # (V, n), descending
     _, _, feas = evaluate_rates_batch(capacity, rates, model_bits,
                                       lambda_target, reception_based)
@@ -294,7 +426,13 @@ def solve_k_nearest(
 ) -> RateSolution:
     """R_i = capacity to node i's k-th best neighbor; the whole k = 1..n-1
     sweep is evaluated as one batch and the best feasible k wins (ties to
-    the smallest k, matching the reference's ascending scan)."""
+    the smallest k, matching the reference's ascending scan).
+
+    Above ``topology.ITERATIVE_MIN_N`` nodes the sweep visits only the
+    log-spaced ``k_grid`` and selects via the power-iteration pre-screen
+    with exact certification of the winner (``certified_best``); the
+    candidate construction itself is **local** — row sorts, no cross-node
+    product — so it scales to n in the thousands."""
     n = capacity.shape[0]
     per_node = _per_node_candidates(capacity)
     rows = []
@@ -302,6 +440,15 @@ def solve_k_nearest(
         row = np.sort(capacity[i][np.isfinite(capacity[i])
                                   & (capacity[i] > 0)])[::-1]
         rows.append(row)
+    if n > ITERATIVE_MIN_N:
+        ks = k_grid(n)
+        rates = np.empty((ks.size, n))
+        for r, k in enumerate(ks):
+            for i in range(n):
+                rates[r, i] = rows[i][min(int(k) - 1, rows[i].size - 1)] \
+                    if rows[i].size else per_node[i][0]
+        return certified_best(capacity, rates, model_bits, lambda_target,
+                              reception_based)
     rates = np.empty((n - 1, n))
     for k in range(1, n):
         for i in range(n):
@@ -369,8 +516,14 @@ def solve_bruteforce_reference(
     lambda_target: float,
     reception_based: bool = False,
     max_nodes: int = 8,
+    max_candidates: int = MAX_BRUTEFORCE_CANDIDATES,
 ) -> RateSolution:
-    """Algorithm 2 verbatim: exhaustive search over per-row capacity picks.
+    """Algorithm 2 verbatim: exhaustive search over per-row capacity picks,
+    streamed in index space (``_combo_rates`` walks the same C-order the
+    original ``itertools.product`` enumeration visited, without ever
+    materializing the grid) and capped at ``max_candidates`` combos — above
+    the cap the search would silently hang for hours, so it raises toward
+    the local sweeps instead.
 
     Complexity ~ prod_i |row_i| * O(n^3); practical for n <= ``max_nodes``.
     """
@@ -378,13 +531,25 @@ def solve_bruteforce_reference(
     if n > max_nodes:
         raise ValueError(f"brute force capped at n={max_nodes}; use solve() for n={n}")
     per_node = _per_node_candidates(capacity)
+    total = 1
+    for p in per_node:
+        total *= p.size
+    if total > max_candidates:
+        raise ValueError(
+            f"brute force grid has {total} candidate combos "
+            f"(> max_candidates={max_candidates}); use solve_k_nearest / "
+            f"solve('auto')'s local sweep instead")
     best: Optional[RateSolution] = None
-    for combo in itertools.product(*per_node):
-        sol = _evaluate(capacity, np.asarray(combo), model_bits, lambda_target, reception_based)
-        if not sol.feasible:
-            continue
-        if best is None or sol.t_com_s < best.t_com_s:
-            best = sol
+    stream = 4096
+    for start in range(0, total, stream):
+        idx = np.arange(start, min(start + stream, total))
+        for combo in _combo_rates(per_node, idx):
+            sol = _evaluate(capacity, combo, model_bits, lambda_target,
+                            reception_based)
+            if not sol.feasible:
+                continue
+            if best is None or sol.t_com_s < best.t_com_s:
+                best = sol
     if best is None:  # even the densest topology misses the target
         rates = np.array([per_node[i][-1] for i in range(n)])
         return _evaluate(capacity, rates, model_bits, lambda_target, reception_based)
@@ -490,8 +655,13 @@ def solve(
     reception_based: bool = False,
 ) -> RateSolution:
     """Front door. ``auto`` = brute force up to n=7 (exact, like the paper),
-    else best-of(greedy, k_nearest, common_rate). ``auto_reference`` runs
-    the same dispatch over the pinned sequential solvers (benchmarking)."""
+    then best-of(greedy, k_nearest, common_rate), and above
+    ``topology.ITERATIVE_MIN_N`` best-of(k_nearest, common_rate) on their
+    scalable certified sweeps — greedy's sequential single-raises need one
+    exact feasibility verdict per step, which the iterative pre-screen
+    cannot give, so it drops out of ``auto`` at large n (still callable
+    directly). ``auto_reference`` runs the same small-n dispatch over the
+    pinned sequential solvers (benchmarking)."""
     n = capacity.shape[0]
     if method in ("auto", "auto_reference"):
         ref = method == "auto_reference"
@@ -499,9 +669,12 @@ def solve(
             bf = solve_bruteforce_reference if ref else solve_bruteforce
             return bf(capacity, model_bits, lambda_target,
                       reception_based=reception_based)
-        trio = (solve_greedy_reference, solve_k_nearest_reference,
-                solve_common_rate_reference) if ref else \
-               (solve_greedy, solve_k_nearest, solve_common_rate)
+        if n > ITERATIVE_MIN_N and not ref:
+            trio = (solve_k_nearest, solve_common_rate)
+        else:
+            trio = (solve_greedy_reference, solve_k_nearest_reference,
+                    solve_common_rate_reference) if ref else \
+                   (solve_greedy, solve_k_nearest, solve_common_rate)
         sols = [f(capacity, model_bits, lambda_target, reception_based=reception_based)
                 for f in trio]
         feasible = [s for s in sols if s.feasible]

@@ -60,10 +60,11 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .access_opt import _in_range, _rate_candidates
+from .access_opt import _CERT_BUDGET, _CHUNK_ELEMS, _in_range, _rate_candidates
 from .comm_model import tdm_time_s
-from .topology import (adjacency_from_rates, paper_w, spectral_lambda,
-                       spectral_lambda_batch)
+from .topology import (ITERATIVE_MIN_N, adjacency_from_rates, paper_w,
+                       spectral_lambda, spectral_lambda_batch,
+                       spectral_lambda_iter_batch)
 
 __all__ = ["ScheduleSolution", "collision_free_groups", "default_fractions",
            "group_airtime_s", "rate_factor", "sampled_expected_w",
@@ -243,30 +244,46 @@ def solve_schedule(
     minimal ``score_s`` (ties to the earliest candidate — rates outer,
     fractions inner, the reference's scan order); when nothing is feasible
     (every expected graph disconnected), the candidate with minimal
-    lambda."""
+    lambda.
+
+    The E[W] stack is built and scored in memory-bounded chunks (per-item
+    results are unchanged — the batched eig runs per matrix). Above
+    ``topology.ITERATIVE_MIN_N`` nodes the sweep's lambdas come from the
+    power-iteration pre-screen and the pick is **certified**: candidates are
+    walked in ascending estimated-score order and the first whose exact
+    ``spectral_lambda`` (recomputed by ``_evaluate_schedule``) mixes wins,
+    falling back to the smallest-estimate candidates."""
     capacity = np.asarray(capacity, dtype=np.float64)
     n = capacity.shape[0]
     fr = default_fractions() if fractions is None else \
         np.asarray(fractions, dtype=np.float64)
     rate_rows = _rate_candidates(capacity)                  # (B, n)
     b = rate_rows.shape[0]
+    large = n > ITERATIVE_MIN_N
     in_range = _in_range(capacity, bandwidth_hz, interference_min_snr)
 
-    # per rate row: intended graph, grouped full-activation airtime
+    # per rate row: intended graph, grouped full-activation airtime; the
+    # (chunk, fr.size, n, n) E[W] stack is scored and discarded per chunk
     t_full = np.empty(b)
-    ws = np.empty((b, fr.size, n, n))
-    for r in range(b):
-        rates = rate_rows[r]
-        intended = adjacency_from_rates(capacity, rates).astype(bool)
-        groups = collision_free_groups(intended, in_range, range(n),
-                                       rates=rates, max_groups=max_groups)
-        t_full[r] = group_airtime_s(model_bits, rates, groups)
-        for k, f in enumerate(fr):
-            ws[r, k] = sampled_expected_w(intended,
-                                          min(float(f), float(duty_cycle)))
+    lams = np.empty((b, fr.size))
+    step = max(1, _CHUNK_ELEMS // (fr.size * n * n))
+    for s in range(0, b, step):
+        rows = rate_rows[s:min(s + step, b)]
+        ws = np.empty((rows.shape[0], fr.size, n, n))
+        for j, rates in enumerate(rows):
+            intended = adjacency_from_rates(capacity, rates).astype(bool)
+            groups = collision_free_groups(intended, in_range, range(n),
+                                           rates=rates, max_groups=max_groups)
+            t_full[s + j] = group_airtime_s(model_bits, rates, groups)
+            for k, f in enumerate(fr):
+                ws[j, k] = sampled_expected_w(
+                    intended, min(float(f), float(duty_cycle)))
+        flat_ws = ws.reshape(rows.shape[0] * fr.size, n, n)
+        lams[s:s + rows.shape[0]] = (
+            spectral_lambda_iter_batch(flat_ws) if large
+            else spectral_lambda_batch(flat_ws)
+        ).reshape(rows.shape[0], fr.size)
 
-    lams = spectral_lambda_batch(ws.reshape(b * fr.size, n, n)) \
-        .reshape(b, fr.size)
     # score = (1 / (1 - lam)) * (f * t_full), associated exactly as
     # ``_evaluate_schedule`` computes it, so the batched ranking agrees with
     # the sequential reference to the last bit
@@ -274,15 +291,39 @@ def solve_schedule(
         rf = np.where(lams < 1.0, 1.0 / (1.0 - lams), np.inf)
     score = rf * (fr[None, :] * t_full[:, None])
 
+    def _score(flat: int) -> ScheduleSolution:
+        r, k = divmod(flat, fr.size)
+        return _evaluate_schedule(capacity, rate_rows[r], float(fr[k]),
+                                  model_bits, bandwidth_hz,
+                                  interference_min_snr, duty_cycle,
+                                  max_groups)
+
+    if large:
+        order = np.argsort(score.ravel(), kind="stable")
+        screened = order[np.isfinite(score.ravel()[order])]
+        certs = 0
+        for flat in screened:
+            if certs >= _CERT_BUDGET:
+                break
+            certs += 1
+            sol = _score(int(flat))
+            if sol.feasible:
+                return sol
+        for flat in np.argsort(lams.ravel(), kind="stable"):
+            if certs >= 2 * _CERT_BUDGET:
+                break
+            certs += 1
+            sol = _score(int(flat))
+            if sol.feasible:
+                return sol
+        return _score(int(np.argmin(lams)))
+
     feas = lams < 1.0
     if feas.any():
         flat = int(np.argmin(np.where(feas, score, np.inf)))
     else:
         flat = int(np.argmin(lams))
-    r, k = divmod(flat, fr.size)
-    return _evaluate_schedule(capacity, rate_rows[r], float(fr[k]),
-                              model_bits, bandwidth_hz, interference_min_snr,
-                              duty_cycle, max_groups)
+    return _score(flat)
 
 
 def solve_schedule_reference(

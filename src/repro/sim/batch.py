@@ -255,6 +255,7 @@ def train_cnn_on_traces(
     ds=None,
     trace_batch: Optional[TraceBatch] = None,
     unroll: int | bool = True,
+    engine: str = "event",
 ) -> tuple[TraceBatch, dict]:
     """The batched counterpart of ``trace.simulate_dpsgd_cnn``: train the
     paper's CNN over a family of precomputed channel realizations in one
@@ -264,7 +265,10 @@ def train_cnn_on_traces(
     scenario at several seeds (a fading Monte-Carlo sweep). All must share
     ``n_nodes`` and ``eval_every_rounds``. Pass ``trace_batch`` to reuse
     already-precomputed traces (it must have ``epochs * iters_per_epoch``
-    rounds).
+    rounds). ``engine`` is forwarded to ``precompute_traces`` — ``"scan"``/
+    ``"auto"`` realize eligible traces on the jitted round loop
+    (``sim.jit_trace``), so channel plane *and* training are both compiled
+    programs at large n.
 
     Returns ``(traces, out)`` where ``out`` has per-trace masked mean
     ``losses`` (S, rounds), eval-round accuracies ``acc`` (S, E) with their
@@ -307,7 +311,7 @@ def train_cnn_on_traces(
     n_rounds = iters_per_epoch * epochs
 
     traces = (trace_batch if trace_batch is not None
-              else precompute_traces(cfgs, n_rounds))
+              else precompute_traces(cfgs, n_rounds, engine=engine))
     if (traces.n_traces != len(cfgs) or traces.n_rounds != n_rounds
             or traces.n_nodes != n_nodes):
         raise ValueError(

@@ -668,20 +668,37 @@ def stack_traces(traces: list) -> TraceBatch:
     )
 
 
-def precompute_trace(cfg, n_rounds: int, **overrides) -> TrainTrace:
+def precompute_trace(cfg, n_rounds: int, engine: str = "event",
+                     **overrides) -> TrainTrace:
     """Realize one scenario's channel plane ahead of training. ``cfg`` is a
-    ``ScenarioConfig`` or a registered scenario name (+ overrides)."""
+    ``ScenarioConfig`` or a registered scenario name (+ overrides).
+
+    ``engine`` picks the round loop: ``"event"`` (default) is the host
+    discrete-event loop above — every scenario, bit-stable against all
+    prior releases; ``"scan"`` compiles the whole trace into one jitted
+    ``lax.scan`` (``sim.jit_trace`` — the large-n fast path, stationary TDM
+    scenarios only, channel realizations differ from the host streams);
+    ``"auto"`` uses the scan plane whenever the scenario is eligible."""
     if isinstance(cfg, str):
         cfg = get_scenario(cfg, **overrides)
     elif overrides:
         cfg = cfg.replace(**overrides)
+    if engine not in ("event", "scan", "auto"):
+        raise ValueError(
+            f"engine must be 'event', 'scan' or 'auto', got {engine!r}")
+    if engine != "event":
+        from .jit_trace import precompute_trace_scan, scan_unsupported_reason
+        if engine == "scan" or scan_unsupported_reason(cfg) is None:
+            return precompute_trace_scan(cfg, n_rounds)
     return WirelessSimulator(cfg).precompute(n_rounds)
 
 
-def precompute_traces(configs, n_rounds: int) -> TraceBatch:
+def precompute_traces(configs, n_rounds: int,
+                      engine: str = "event") -> TraceBatch:
     """``precompute_trace`` over a sequence of configs/names, stacked into a
     ``TraceBatch`` (the Monte-Carlo channel-realization family)."""
-    return stack_traces([precompute_trace(c, n_rounds) for c in configs])
+    return stack_traces([precompute_trace(c, n_rounds, engine=engine)
+                         for c in configs])
 
 
 # ---------------------------------------------------------------------------

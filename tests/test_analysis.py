@@ -253,6 +253,40 @@ def test_dtype001_catches_float64_into_jax(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# DTYPE002 — jax eigensolves outside enable_x64
+# ---------------------------------------------------------------------------
+
+def test_dtype002_flags_eig_outside_x64_scope(tmp_path):
+    r = run(tmp_path, {"src/repro/core/spec.py": """
+        import jax.numpy as jnp
+        import numpy as np
+
+        def lam(ws):
+            return jnp.abs(jnp.linalg.eigvals(ws))
+
+        def host(ws):
+            return np.abs(np.linalg.eigvals(ws))   # numpy plane: fine
+    """})
+    assert rules(r) == ["DTYPE002"]
+    assert r.findings[0].scope == "lam"
+
+
+def test_dtype002_quiet_inside_x64_scope(tmp_path):
+    r = run(tmp_path, {"src/repro/core/spec.py": """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        def lam(ws):
+            with enable_x64():
+                def _eig(m):
+                    return jnp.abs(jnp.linalg.eigvals(m))
+                return jax.jit(jax.vmap(_eig))(ws)
+    """})
+    assert rules(r) == []
+
+
+# ---------------------------------------------------------------------------
 # PAL001 / PAL002 — Pallas kernel lint
 # ---------------------------------------------------------------------------
 

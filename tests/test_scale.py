@@ -1,0 +1,278 @@
+"""Large-n plane: iterative spectral bounds, certified sweeps, scan traces.
+
+Property suite for the power-iteration lambda path (``topology.
+spectral_lambda_iter*``), the certified large-n solver sweeps
+(``rate_opt``/``access_opt``/``sched_opt``), the bruteforce candidate cap,
+the jax x64 backend fix, and the jitted round loop (``sim.jit_trace``) —
+plus n=6 end-to-end bit-identity checks that the small-n solver paths are
+untouched.
+"""
+import numpy as np
+import pytest
+
+from repro.core import access_opt, channel, rate_opt, sched_opt, topology
+from repro.core.topology import (ITERATIVE_MIN_N, connected_batch, paper_w,
+                                 spectral_lambda, spectral_lambda_batch,
+                                 spectral_lambda_iter,
+                                 spectral_lambda_iter_batch)
+
+MODEL_BITS = 698_880.0
+
+
+def _cap(n, seed=0, eps=4.0):
+    pos = channel.random_placement(n, 200.0, seed=seed)
+    return channel.capacity_matrix(pos,
+                                   channel.ChannelParams(path_loss_exp=eps))
+
+
+def _geo_w(n, seed, radius=70.0):
+    """Row-stochastic (generally asymmetric) paper W on a random geometric
+    graph — the shape every solver candidate has."""
+    pos = channel.random_placement(n, 200.0, seed=seed)
+    d = channel.pairwise_distances(pos)
+    a = (d <= radius).astype(np.float64)
+    np.fill_diagonal(a, 1.0)
+    return paper_w(a)
+
+
+# -- bound direction & exactness --------------------------------------------
+
+@pytest.mark.parametrize("adj", [
+    topology.ring_adjacency(8, 1),
+    topology.ring_adjacency(64, 3),
+    topology.torus_adjacency(8, 8),
+    topology.hypercube_adjacency(64),
+])
+def test_iter_lower_bounds_exact_on_symmetric(adj):
+    w = topology.metropolis_w(adj)
+    exact = spectral_lambda(w)
+    est = spectral_lambda_iter(w)
+    # mean-zero subspace is invariant for symmetric W: every iterate's
+    # Rayleigh growth is a true lower bound on the paper's lambda
+    assert est <= exact + 1e-12
+    assert est == pytest.approx(exact, abs=1e-4)
+
+
+def test_iter_complete_graph_zero():
+    assert spectral_lambda_iter(topology.fully_connected_w(32)) == \
+        pytest.approx(0.0, abs=1e-12)
+
+
+def test_iter_asymmetric_matches_exact():
+    # for asymmetric (non-normal) W the estimator is a screen, not a bound:
+    # one-step norms can overshoot the spectral radius slightly, transients
+    # can undershoot at small budgets. Either way the certified sweeps
+    # recompute the winner with exact eig, so screening accuracy is all
+    # that's pinned here.
+    for seed in range(4):
+        w = _geo_w(48, seed)
+        exact = spectral_lambda(w)
+        assert spectral_lambda_iter(w) == pytest.approx(exact, abs=6e-2)
+        assert spectral_lambda_iter(w, iters=512) == pytest.approx(
+            exact, abs=5e-4)
+
+
+def test_iter_disconnected_reports_one():
+    # two disjoint rings: eigenvalue 1 has multiplicity 2 -> lambda == 1,
+    # and the estimator must report it exactly (not a power-iteration
+    # estimate slightly below)
+    a = np.zeros((12, 12))
+    a[:6, :6] = topology.ring_adjacency(6, 1)
+    a[6:, 6:] = topology.ring_adjacency(6, 1)
+    np.fill_diagonal(a, 1.0)
+    w = paper_w(a)
+    assert spectral_lambda(w) == pytest.approx(1.0)
+    assert spectral_lambda_iter(w) == 1.0
+    assert not connected_batch(w[None])[0]
+
+
+def test_connected_batch_matches_scalar():
+    ws = np.stack([_geo_w(24, s, radius=45.0) for s in range(8)])
+    got = connected_batch(ws)
+    want = topology.connected_batch_reference(ws)
+    assert (got == want).all()
+    assert (want == np.array(
+        [topology.is_connected(w > 0) for w in ws])).all()
+
+
+def test_iter_batch_vs_scalar_parity():
+    ws = np.stack([_geo_w(32, s) for s in range(6)])
+    batch = spectral_lambda_iter_batch(ws)
+    scalars = np.array([spectral_lambda_iter(w) for w in ws])
+    assert (batch == scalars).all()
+
+
+# -- satellite: exact-symmetry dispatch -------------------------------------
+
+def test_near_symmetric_asymmetric_w_uses_general_eig():
+    # a within-np.allclose-tolerance asymmetric perturbation must NOT be
+    # routed to eigvalsh (which reads one triangle, silently symmetrizing)
+    rng = np.random.default_rng(0)
+    base = topology.metropolis_w(topology.ring_adjacency(10, 2))
+    pert = rng.normal(0.0, 1e-9, size=base.shape)
+    w = base + pert
+    assert np.allclose(w, w.T)          # the old dispatch would symmetrize
+    ev = np.linalg.eigvals(w)
+    ev = ev[np.argsort(-np.abs(ev))]
+    want = float(np.abs(ev[1]))
+    assert spectral_lambda(w) == pytest.approx(want, abs=0, rel=1e-12)
+    assert spectral_lambda_batch(w[None])[0] == pytest.approx(
+        want, abs=0, rel=1e-12)
+
+
+def test_exactly_symmetric_still_fast_path():
+    w = topology.metropolis_w(topology.torus_adjacency(4, 5))
+    assert (w == w.T).all()
+    assert spectral_lambda(w) == pytest.approx(
+        float(np.sort(np.abs(np.linalg.eigvalsh(w)))[-2]), abs=1e-12)
+
+
+# -- satellite: jax backend x64 ---------------------------------------------
+
+def test_jax_backend_agrees_with_numpy_float64():
+    jax = pytest.importorskip("jax")
+    del jax
+    ws = np.stack([_geo_w(16, s) for s in range(4)])
+    got = rate_opt._spectral_lambda_batch_jax(ws)
+    want = spectral_lambda_batch(ws)
+    # the jax path now runs the eig in float64 (enable_x64): agreement is
+    # pinned at ~1e-9, far past any fp32 eig (~1e-5)
+    assert np.abs(got - want).max() < 1e-9
+
+
+# -- satellite: bruteforce cap ----------------------------------------------
+
+def test_bruteforce_caps_candidate_count():
+    c = _cap(8)
+    with pytest.raises(ValueError, match="solve_k_nearest"):
+        rate_opt.solve_bruteforce(c, MODEL_BITS, 0.5, max_candidates=10_000)
+    with pytest.raises(ValueError, match="solve_k_nearest"):
+        rate_opt.solve_bruteforce_reference(c, MODEL_BITS, 0.5,
+                                            max_candidates=10_000)
+
+
+def test_bruteforce_reference_streams_bit_identically():
+    # the streaming index-space enumeration must reproduce the old
+    # itertools.product scan pick-for-pick
+    c = _cap(5, seed=3)
+    a = rate_opt.solve_bruteforce(c, MODEL_BITS, 0.5)
+    b = rate_opt.solve_bruteforce_reference(c, MODEL_BITS, 0.5)
+    assert (a.rates_bps == b.rates_bps).all()
+    assert a.t_com_s == b.t_com_s and a.lam == b.lam
+
+
+# -- certified large-n sweeps -----------------------------------------------
+
+@pytest.mark.parametrize("n", [128])
+def test_large_n_solve_is_certified_and_feasible(n):
+    c = _cap(n)
+    sol = rate_opt.solve(c, MODEL_BITS, 0.5, method="auto")
+    # certify-on-winner contract: the returned lambda is the exact eig of
+    # the returned W, and it clears the target
+    assert sol.lam == spectral_lambda(sol.w)
+    assert sol.feasible and sol.lam <= 0.5 + 1e-12
+
+
+def test_large_n_access_and_sched_certified():
+    c = _cap(128)
+    a = access_opt.solve_access(c, MODEL_BITS, 0.9)
+    assert a.lam == spectral_lambda(a.w)
+    s = sched_opt.solve_schedule(c, MODEL_BITS)
+    assert s.lam == spectral_lambda(s.w)
+    assert s.feasible
+
+
+def test_k_grid_and_prune_descending():
+    assert rate_opt.k_grid(8).tolist() == list(range(1, 8))
+    ks = rate_opt.k_grid(1024)
+    assert ks[0] == 1 and ks[-1] == 1023
+    assert len(ks) <= 24 and (np.diff(ks) > 0).all()
+    vals = np.linspace(9.0, 1.0, 200)
+    pruned = rate_opt.prune_descending(vals)
+    assert pruned[0] == 9.0 and pruned[-1] == 1.0
+    assert len(pruned) <= 48 and (np.diff(pruned) < 0).all()
+
+
+# -- n=6 end-to-end bit-identity --------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_small_n_solvers_bit_identical_to_references(seed):
+    c = _cap(6, seed=seed)
+    pairs = [
+        (rate_opt.solve_k_nearest, rate_opt.solve_k_nearest_reference),
+        (rate_opt.solve_common_rate, rate_opt.solve_common_rate_reference),
+        (rate_opt.solve_greedy, rate_opt.solve_greedy_reference),
+        (rate_opt.solve_bruteforce, rate_opt.solve_bruteforce_reference),
+    ]
+    for fast, ref in pairs:
+        a, b = fast(c, MODEL_BITS, 0.3), ref(c, MODEL_BITS, 0.3)
+        assert (a.rates_bps == b.rates_bps).all(), fast.__name__
+        assert a.t_com_s == b.t_com_s and a.lam == b.lam, fast.__name__
+    a = access_opt.solve_access(c, MODEL_BITS, 0.5)
+    b = access_opt.solve_access_reference(c, MODEL_BITS, 0.5)
+    assert (a.rates_bps == b.rates_bps).all()
+    assert a.p[0] == b.p[0] and a.t_round_s == b.t_round_s
+    s = sched_opt.solve_schedule(c, MODEL_BITS)
+    r = sched_opt.solve_schedule_reference(c, MODEL_BITS)
+    assert (s.rates_bps == r.rates_bps).all()
+    assert s.tx_fraction == r.tx_fraction and s.score_s == r.score_s
+
+
+def test_iterative_threshold_leaves_small_n_untouched():
+    # everything at or below the threshold must run the exact-eig sweep
+    assert ITERATIVE_MIN_N >= 6
+
+
+# -- jitted round loop -------------------------------------------------------
+
+def test_scan_trace_static_matches_event_loop():
+    pytest.importorskip("jax")
+    from repro.sim.trace import precompute_trace
+
+    ev = precompute_trace("static", 6)
+    sc = precompute_trace("static", 6, engine="scan")
+    assert np.array_equal(sc.w_eff, ev.w_eff)
+    assert np.array_equal(sc.live, ev.live)
+    rel = np.abs(sc.t_comm_s - ev.t_comm_s) / ev.t_comm_s
+    assert rel.max() < 1e-9               # Eq. 3 to association order
+    assert sc.trace.records[0].outage_links == 0
+
+
+def test_scan_trace_deterministic_and_stochastic_rows():
+    pytest.importorskip("jax")
+    from repro.sim.jit_trace import precompute_trace_scan
+    from repro.sim.scenario import get_scenario
+
+    cfg = get_scenario("fading", **{"fading.shadowing_sigma_db": 0.0})
+    a = precompute_trace_scan(cfg, 6)
+    b = precompute_trace_scan(cfg, 6)
+    assert np.array_equal(a.w_eff, b.w_eff)
+    assert np.array_equal(a.t_comm_s, b.t_comm_s)
+    assert np.allclose(a.w_eff.sum(axis=2), 1.0)
+    assert (np.diff(a.t_start_s) > 0).all()
+
+
+def test_scan_trace_rejects_ineligible_scenarios():
+    pytest.importorskip("jax")
+    from repro.sim.jit_trace import (precompute_trace_scan,
+                                     scan_unsupported_reason)
+    from repro.sim.scenario import get_scenario
+
+    for name, frag in [("mobile", "mobility"), ("churn", "churn"),
+                       ("fault_chaos", "fault"), ("bass_static", "policy"),
+                       ("fading", "shadowing")]:
+        reason = scan_unsupported_reason(get_scenario(name))
+        assert reason is not None and frag in reason, name
+        with pytest.raises(ValueError, match=frag):
+            precompute_trace_scan(get_scenario(name), 2)
+
+
+def test_scan_engine_auto_falls_back():
+    pytest.importorskip("jax")
+    from repro.sim.trace import precompute_trace
+
+    # ineligible scenario + engine="auto" must silently use the event loop
+    tr = precompute_trace("churn", 3, engine="auto")
+    assert tr.n_rounds == 3
+    with pytest.raises(ValueError, match="engine"):
+        precompute_trace("static", 2, engine="warp")
