@@ -55,7 +55,9 @@ Cross-checks (``checks`` in the JSON, process exits 1 on any failure):
 * a fast-MAC and a reference-MAC simulator run of the same scenario produce
   identical round durations / retx / outage / delivered fractions;
 * ``checks.scale`` — at every ``n_sweep`` size the winning plan's lambda is
-  the exact eig of its W (certify-on-winner) and clears the density target;
+  the exact eig of its W (certify-on-winner) and clears the density target,
+  and the n=64 solve stays under ``MID_N_SOLVER_BUDGET_S`` (pins the mid-n
+  greedy cliff fixed by the screened ``rate_opt.solve_greedy``);
 * the static scenario still reproduces Eq. 3 to 1e-9 relative — and its
   int8 variant reproduces Eq. 3 *at the compressed wire bits* to 1e-9.
 
@@ -518,14 +520,30 @@ def bench_n_sweep(quick: bool) -> dict:
     return out
 
 
+# Mid-n planner budget (seconds). The default greedy solver at n=64 used to
+# cost ~20s — every trial raise paid a full batch of exact eigs, a cliff
+# sitting between the cheap small-n solves and the iterative large-n sweeps.
+# The screened greedy (``rate_opt.GREEDY_SCREEN_MIN_N``: optimistic exact
+# certs + lazy power-iteration pre-screen, bit-identical picks) brings it to
+# ~2-4s; the budget is generous so slow CI boxes pass, but a regression back
+# to the unscreened cliff fails loudly.
+MID_N_SOLVER_BUDGET_S = 12.0
+
+
 def check_scale(n_sweep: dict) -> dict:
-    """Gate on correctness, not timing: at every n the winning plan's
-    lambda must be the exact eig of its W (certify-on-winner) and the plan
-    must clear the density target."""
+    """Gate: at every n the winning plan's lambda must be the exact eig of
+    its W (certify-on-winner) and the plan must clear the density target;
+    the n=64 solve must also stay under ``MID_N_SOLVER_BUDGET_S`` (the
+    mid-n greedy cliff fixed by the screened ``solve_greedy``)."""
     sizes = n_sweep["sizes"]
+    mid = sizes.get("64")
+    mid_n_fast = bool(mid is None or mid["t_solver_s"] <= MID_N_SOLVER_BUDGET_S)
     return {
         "certified": {n: v["certified"] for n, v in sizes.items()},
         "feasible": {n: v["feasible"] for n, v in sizes.items()},
+        "mid_n_t_solver_s": (None if mid is None else mid["t_solver_s"]),
+        "mid_n_budget_s": MID_N_SOLVER_BUDGET_S,
+        "mid_n_fast": mid_n_fast,
         "all_certified": bool(all(v["certified"] for v in sizes.values())),
         "all_feasible": bool(all(v["feasible"] for v in sizes.values())),
     }
@@ -596,7 +614,8 @@ def main(argv=None) -> int:
               or not all(v for k, v in checks["fault"].items()
                          if isinstance(v, bool))
               or not checks["scale"]["all_certified"]
-              or not checks["scale"]["all_feasible"])
+              or not checks["scale"]["all_feasible"]
+              or not checks["scale"]["mid_n_fast"])
     result["ok"] = not failed
 
     text = json.dumps(result, indent=2)

@@ -23,6 +23,12 @@ Parity checks (``parity`` in the JSON, process exits 1 on any failure):
   (same live-node counts, losses within 1e-5, final surviving parameters
   within 1e-5).
 
+The ``real_model`` section (also gated, including under ``--quick``) runs
+``repro.sim.real_model_smoke`` in an 8-host-device subprocess — the
+smoke-reduced transformer on a fading trace, node-params sharded over a
+fleet x model mesh, parity <= 1e-5 vs the per-round reference — and times
+the local unsharded scan for a tokens-per-second figure.
+
 Prints the JSON to stdout; full runs also write it to ``--out`` (default
 ``BENCH_train.json`` at the repo root). ``--quick`` (the CI gate) runs a
 smaller sweep and never touches the tracked snapshot unless ``--out`` is
@@ -149,6 +155,62 @@ def check_parity() -> dict:
     return out
 
 
+def bench_real_model(quick: bool) -> dict:
+    """Real-model train-on-trace: the sharded smoke in a subprocess (the
+    main bench process must keep seeing one device) + a local unsharded
+    scan timing. ``ok`` gates on the smoke's parity/span report."""
+    import os
+    import subprocess
+
+    from repro.sim.batch import train_model_on_traces, transformer_adapter
+
+    rounds = 2 if quick else 4
+    batch, seq_len = (2, 8) if quick else (2, 16)
+
+    root = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(root / "src")
+    t0 = time.perf_counter()
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.sim.real_model_smoke", "--json",
+         "--rounds", str(rounds), "--batch", str(batch),
+         "--seq-len", str(seq_len)],
+        capture_output=True, text=True, env=env, timeout=1800)
+    t_smoke = time.perf_counter() - t0
+    try:
+        report = json.loads(proc.stdout.strip().splitlines()[-1])
+    except (IndexError, json.JSONDecodeError):
+        report = {"ok": False, "error": proc.stderr[-2000:]}
+
+    # local unsharded scan: steady-state tokens/s of the compiled loop
+    adapter = transformer_adapter(batch=batch, seq_len=seq_len)
+    cfg = get_scenario("fading", model_bits=adapter.model_bits,
+                       model_shapes=adapter.param_shapes,
+                       eval_every_rounds=rounds)
+    t0 = time.perf_counter()
+    train_model_on_traces(adapter, [cfg], rounds)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _, out = train_model_on_traces(adapter, [cfg], rounds)
+    t_warm = time.perf_counter() - t0
+    tokens = rounds * cfg.n_nodes * batch * seq_len
+    return {
+        "arch": adapter.name,
+        "rounds": rounds, "batch": batch, "seq_len": seq_len,
+        "model_bits": adapter.model_bits,
+        "wire_bits": cfg.wire_bits(),
+        "t_scan_cold_s": t_cold,
+        "t_scan_warm_s": t_warm,
+        "tokens_per_s": tokens / t_warm,
+        "final_loss": float(out["losses"][0][-1]),
+        "t_sharded_smoke_s": t_smoke,
+        "sharded": report,
+        "ok": bool(proc.returncode == 0 and report.get("ok")
+                   and np.isfinite(out["losses"]).all()),
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -173,10 +235,12 @@ def main(argv=None) -> int:
         "analysis_clean": repo_is_clean(),
         "sweep": bench_sweep(n_seeds, scan_reps),
         "parity": check_parity(),
+        "real_model": bench_real_model(args.quick),
     }
     result["sweep"]["speedup_ok"] = bool(result["sweep"]["speedup"] >= 5.0)
     failed = not (result["parity"]["static_ok"]
-                  and result["parity"]["churn_ok"])
+                  and result["parity"]["churn_ok"]
+                  and result["real_model"]["ok"])
     result["ok"] = not failed
 
     text = json.dumps(result, indent=2)

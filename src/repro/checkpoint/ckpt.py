@@ -99,9 +99,26 @@ def restore(directory: str, like: PyTree, step: Optional[int] = None,
     return jax.tree.unflatten(treedef, leaves), step
 
 
+def _node_width(state: PyTree, what: str) -> int:
+    """Shared leading node-axis width of the non-scalar leaves (scalar
+    leaves — step counters and the like — carry no node axis and pass
+    through every elastic transform untouched). Pytree-general: any leaf
+    structure works as long as the node axis leads. Raises on disagreeing
+    leading dims; returns 0 when every leaf is scalar."""
+    from ..core.dpsgd import node_axis_size
+    return node_axis_size(state, what, allow_scalar=True)
+
+
 def reshape_nodes(state: PyTree, survivors: list[int], n_new: int) -> PyTree:
     """Elastic restore: keep surviving node rows, fill the rest with the
     survivor mean (leading axis = node axis on every leaf of params/opt)."""
+    width = _node_width(state, "reshape_nodes state")
+    surv = np.asarray(survivors, dtype=np.int64)
+    if width and surv.size and int(surv.max()) >= width:
+        raise ValueError(
+            f"survivor index {int(surv.max())} out of range for the state's "
+            f"node axis of {width}")
+
     def fix(leaf):
         if leaf.ndim == 0:
             return leaf
@@ -124,8 +141,18 @@ def compact_nodes(state: PyTree, live: np.ndarray) -> PyTree:
     """Masked fixed-width state -> compacted state: keep live node rows, in
     original-id order. The inverse (for live rows) of ``expand_nodes``; used
     to checkpoint or hand off the result of the masked scan path
-    (``sim.batch``) in the same layout the per-round driver produces."""
-    idx = np.flatnonzero(np.asarray(live, dtype=bool))
+    (``sim.batch``) in the same layout the per-round driver produces.
+    Pytree-general: any leaf structure (flat CNN arrays, nested transformer
+    blocks) compacts the same way — the only contract is the leading node
+    axis, validated against ``live``'s width so a ragged or transposed
+    state fails loudly instead of gathering the wrong axis."""
+    live = np.asarray(live, dtype=bool)
+    width = _node_width(state, "compact_nodes state")
+    if width and width != live.size:
+        raise ValueError(
+            f"state node axis is {width} but live mask has {live.size} "
+            "entries")
+    idx = np.flatnonzero(live)
     return jax.tree.map(
         lambda leaf: leaf if leaf.ndim == 0 else leaf[idx], state)
 
@@ -136,8 +163,18 @@ def expand_nodes(state: PyTree, survivors: list[int], n_total: int) -> PyTree:
     rows are filled with the survivor mean, matching the ``reshape_nodes``
     warm start (host-side mean for bit-identical replay across hosts). Dead
     rows are inert under ``dpsgd_masked_step`` — the fill only matters if a
-    node is later revived."""
+    node is later revived. Pytree-general with the same validated
+    node-axis contract as ``compact_nodes``."""
     survivors = np.asarray(survivors, dtype=np.int64)
+    width = _node_width(state, "expand_nodes state")
+    if width and width != survivors.size:
+        raise ValueError(
+            f"compacted state node axis is {width} but {survivors.size} "
+            "survivor slots were given")
+    if survivors.size and int(survivors.max()) >= n_total:
+        raise ValueError(
+            f"survivor index {int(survivors.max())} out of range for "
+            f"n_total={n_total}")
 
     def fix(leaf):
         if leaf.ndim == 0:

@@ -26,20 +26,36 @@ from .gossip import GossipPlan
 
 PyTree = Any
 
-__all__ = ["QuantConfig", "PAYLOAD_MODES", "quantize_int8", "dequantize_int8",
+__all__ = ["QuantConfig", "PAYLOAD_MODES", "GRANULARITIES",
+           "quantize_int8", "dequantize_int8",
            "quantize_int8_rows", "dequantize_int8_rows",
            "compressed_gossip_mix_array", "compressed_gossip_mix_buffers",
-           "payload_bits", "compression_ratio"]
+           "payload_bits", "payload_bits_tree", "compression_ratio"]
 
 _BLOCK = 2048  # quantization block (per-block scales bound the error)
 
 PAYLOAD_MODES = ("none", "bf16", "int8")
+
+# "message": every node concatenates its leaves and quantizes the whole
+# buffer once per round — the historical wire format, one int8 block grid
+# over the full model. "leaf": each parameter tensor quantizes
+# independently (its own block grid, its own tail padding), which is
+# layout-preserving for mesh-sharded pytree models — quantizing the
+# concatenated message would gather every shard into one buffer.
+GRANULARITIES = ("message", "leaf")
 
 
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
     mode: str = "int8"          # "none" | "bf16" | "int8"
     error_feedback: bool = True
+    granularity: str = "message"  # "message" (concat-flat) | "leaf" (per-tensor)
+
+    def __post_init__(self):
+        if self.granularity not in GRANULARITIES:
+            raise ValueError(
+                f"granularity must be one of {GRANULARITIES}, "
+                f"got {self.granularity!r}")
 
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array, int]:
@@ -191,6 +207,40 @@ def payload_bits(n: int, cfg: QuantConfig, base_dtype_bits: int = 32) -> float:
         blocks = -(-n // _BLOCK)                      # ceil
         return float(blocks * (_BLOCK * 8 + 32))      # int8 lanes + f32 scale
     raise ValueError(f"unknown compression mode {cfg.mode!r}")
+
+
+def payload_bits_tree(shapes, cfg: QuantConfig,
+                      base_dtype_bits: int = 32) -> float:
+    """**Exact** wire bits of one node's message for a pytree model given
+    its leaf shapes (a sequence of shape tuples, e.g.
+    ``ScenarioConfig.model_shapes``).
+
+    * ``granularity="message"`` — the leaves travel as one concatenated
+      buffer, so this is exactly ``payload_bits(total_elements)``: one
+      int8 block grid over the whole model, a single padded tail block.
+    * ``granularity="leaf"`` — each tensor is quantized and framed
+      independently, so every leaf pads its own tail block and ships its
+      own scales: ``sum(payload_bits(leaf_elements))``. Always >= the
+      message-granularity bits for int8; identical for none/bf16 (both
+      are elementwise).
+
+    This is what Eq. 3 must charge when the training step runs per-leaf
+    compression — the comm plane and ``dpsgd._mix_compressed`` share the
+    framing decision through ``QuantConfig.granularity`` so the accounting
+    cannot drift from the arithmetic.
+    """
+    sizes = []
+    for s in shapes:
+        size = 1
+        for d in s:
+            d = int(d)
+            if d < 0:
+                raise ValueError(f"negative dimension in leaf shape {s!r}")
+            size *= d
+        sizes.append(size)
+    if cfg.granularity == "message" or cfg.mode in ("none", "bf16"):
+        return payload_bits(sum(sizes), cfg, base_dtype_bits)
+    return float(sum(payload_bits(s, cfg, base_dtype_bits) for s in sizes))
 
 
 def compression_ratio(cfg: QuantConfig, n: int,

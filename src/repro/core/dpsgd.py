@@ -28,9 +28,38 @@ import numpy as np
 __all__ = ["DPSGDConfig", "replicate", "mix", "dpsgd_step", "make_dpsgd_step",
            "dpsgd_masked_step", "make_dpsgd_masked_step",
            "dpsgd_masked_compressed_step",
-           "make_dpsgd_compressed_step", "embed_w", "zero_residuals"]
+           "make_dpsgd_compressed_step", "embed_w", "zero_residuals",
+           "node_axis_size"]
 
 PyTree = Any
+
+
+def node_axis_size(tree: PyTree, what: str = "node state",
+                   allow_scalar: bool = False) -> int:
+    """The shared leading node-axis length of every leaf — the shape
+    contract of the masked-state layout (every parameter/residual/batch
+    leaf is ``(n_nodes, ...)``). Raises with the offending leaf path on
+    scalar leaves or disagreeing leading dims: a ragged pytree would
+    otherwise silently mis-mask (``live`` broadcast against the wrong
+    axis) or mis-mix (W applied to a non-node axis) downstream.
+
+    ``allow_scalar=True`` skips 0-d leaves (checkpoint metadata like step
+    counters legitimately has no node axis); returns 0 if every leaf was
+    scalar."""
+    sizes: dict[str, int] = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        if getattr(leaf, "ndim", 0) == 0:
+            if allow_scalar:
+                continue
+            raise ValueError(
+                f"{what} leaf {jax.tree_util.keystr(path)!s} is a scalar; "
+                "every leaf must carry the leading (n_nodes, ...) node axis")
+        sizes[jax.tree_util.keystr(path)] = int(leaf.shape[0])
+    uniq = set(sizes.values())
+    if len(uniq) > 1:
+        raise ValueError(
+            f"{what} leaves disagree on the leading node axis: {sizes}")
+    return uniq.pop() if uniq else 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,23 +221,53 @@ def _mix_compressed(
 ) -> tuple[PyTree, PyTree]:
     """Quantized error-feedback mixing on the masked layout.
 
-    Each node quantizes its **whole message once per round** — the leaves
-    are concatenated into one (n, total) buffer before quantization, so the
-    blockwise-int8 payload is exactly the ``compression.payload_bits`` of
-    the full model that Eq. 3 charges on the wire (quantizing per leaf would
-    pad every leaf to whole blocks and transmit more bits than the comm
-    plane accounts for). Per node:  m_i = Q(x_i + e_i),
-    e_i' = (x_i + e_i) - m_i;  receivers mix the **exact** own value with
-    dequantized neighbor messages,  x_j' = W_jj x_j + sum_{i!=j} W_ji m_i
-    (CHOCO-SGD-flavored, ref [6] of the paper). Under the ``embed_w``
-    contract dead rows come back verbatim (W_jj = 1, off-diagonal 0) and
-    dead columns weight 0, and dead residuals are zeroed so a node that dies
-    mid-trace cannot leak stale quantization error anywhere.
-    ``mode="none"`` degenerates to the exact ``mix`` (bit-identical to the
-    uncompressed step) with the residuals passed through untouched.
+    Per node:  m_i = Q(x_i + e_i),  e_i' = (x_i + e_i) - m_i;  receivers mix
+    the **exact** own value with dequantized neighbor messages,
+    x_j' = W_jj x_j + sum_{i!=j} W_ji m_i (CHOCO-SGD-flavored, ref [6] of
+    the paper). Under the ``embed_w`` contract dead rows come back verbatim
+    (W_jj = 1, off-diagonal 0) and dead columns weight 0, and dead residuals
+    are zeroed so a node that dies mid-trace cannot leak stale quantization
+    error anywhere. ``mode="none"`` degenerates to the exact ``mix``
+    (bit-identical to the uncompressed step) with the residuals passed
+    through untouched.
+
+    ``quant.granularity`` picks the wire format:
+
+    * ``"message"`` — leaves are concatenated into one (n, total) buffer
+      before quantization, so the blockwise-int8 payload is exactly
+      ``compression.payload_bits`` of the full model (the historical
+      format; bit-identical to every pre-pytree trace).
+    * ``"leaf"`` — each tensor quantizes independently with its residual
+      carried as a pytree leaf matching the parameter. This never gathers
+      the model into one buffer, so mesh-sharded leaves stay sharded; the
+      extra tail-block padding per leaf is what
+      ``compression.payload_bits_tree`` charges on the wire.
+
+    Both paths agree bit-for-bit for bf16 (elementwise) and for int8
+    whenever every leaf's flat size is a whole number of quantization
+    blocks; ragged leaves change the block partitioning, which is exactly
+    the wire-format difference the two granularities name.
     """
     if quant.mode == "none":
         return mix(node_params, w), residuals
+    n = node_axis_size(node_params, "node_params")
+    if live.shape[0] != n or w.shape[-1] != n:
+        raise ValueError(
+            f"live {live.shape} / w {w.shape} disagree with the node axis "
+            f"n={n} of node_params")
+    if getattr(quant, "granularity", "message") == "leaf":
+        return _mix_compressed_leaf(node_params, residuals, w, live, quant)
+    return _mix_compressed_message(node_params, residuals, w, live, quant)
+
+
+def _mix_compressed_message(
+    node_params: PyTree,
+    residuals: PyTree,
+    w: jax.Array,
+    live: jax.Array,
+    quant,
+) -> tuple[PyTree, PyTree]:
+    """Concat-flat wire format: one quantized buffer per node per round."""
     from .compression import dequantize_int8_rows, quantize_int8_rows
 
     leaves, treedef = jax.tree.flatten(node_params)
@@ -244,6 +303,48 @@ def _mix_compressed(
             jax.tree.unflatten(treedef, res_out))
 
 
+def _mix_compressed_leaf(
+    node_params: PyTree,
+    residuals: PyTree,
+    w: jax.Array,
+    live: jax.Array,
+    quant,
+) -> tuple[PyTree, PyTree]:
+    """Per-tensor wire format: each leaf quantizes with its own block grid
+    and carries its own error-feedback residual, so sharded leaves never
+    gather. ``payload_bits_tree(..., granularity="leaf")`` charges the
+    per-leaf tail padding this implies."""
+    from .compression import dequantize_int8_rows, quantize_int8_rows
+
+    w32 = w.astype(jnp.float32)
+    diag = jnp.diagonal(w32)
+    off = w32 - jnp.diag(diag)
+    live_col = live.reshape(live.shape[0], 1)
+
+    def _one(p: jax.Array, r: jax.Array) -> tuple[jax.Array, jax.Array]:
+        n = p.shape[0]
+        flat = p.reshape(n, -1).astype(jnp.float32)
+        res = r.reshape(n, -1)
+        carried = flat + (res if quant.error_feedback else 0.0)
+        if quant.mode == "bf16":
+            deq = carried.astype(jnp.bfloat16).astype(jnp.float32)
+        elif quant.mode == "int8":
+            q, scale = quantize_int8_rows(carried)
+            deq = dequantize_int8_rows(q, scale, carried.shape[1])
+        else:
+            raise ValueError(f"unknown compression mode {quant.mode!r}")
+        new_res = carried - deq if quant.error_feedback else res
+        new_res = jnp.where(live_col, new_res, jnp.zeros((), new_res.dtype))
+        mixed = diag[:, None] * flat + off @ deq
+        return mixed.reshape(p.shape).astype(p.dtype), new_res.reshape(p.shape)
+
+    leaves, treedef = jax.tree.flatten(node_params)
+    res_leaves = treedef.flatten_up_to(residuals)
+    pairs = [_one(p, r) for p, r in zip(leaves, res_leaves)]
+    return (jax.tree.unflatten(treedef, [m for m, _ in pairs]),
+            jax.tree.unflatten(treedef, [e for _, e in pairs]))
+
+
 def dpsgd_masked_compressed_step(
     loss_fn: Callable[[PyTree, PyTree], jax.Array],
     node_params: PyTree,
@@ -256,10 +357,11 @@ def dpsgd_masked_compressed_step(
 ) -> tuple[PyTree, PyTree, jax.Array]:
     """``dpsgd_masked_step`` with quantized error-feedback mixing.
 
-    ``quant`` is a ``compression.QuantConfig``; every sender quantizes its
-    whole message once per round (one blockwise-int8 buffer — or bf16 cast —
-    over the concatenated leaves, so the payload is exactly the wire bits
-    Eq. 3 charges), the self term stays exact, and per-node residuals ride
+    ``quant`` is a ``compression.QuantConfig``; every sender quantizes once
+    per round — one blockwise-int8 buffer (or bf16 cast) over the
+    concatenated leaves with ``granularity="message"``, or one buffer per
+    tensor with ``granularity="leaf"`` (the mesh-shardable format; see
+    ``_mix_compressed``) — the self term stays exact, and per-node residuals ride
     along as explicit state — pass ``zero_residuals(node_params)`` at round 0 and
     thread the returned residuals through (the train-on-trace scan carries
     them). Dead nodes (``live`` False) keep their parameters verbatim and

@@ -49,7 +49,7 @@ __all__ = ["RateSolution", "JointRateSolution", "solve_bruteforce",
            "solve_k_nearest_reference", "solve_greedy_reference",
            "evaluate_rates_batch", "clear_candidate_cache",
            "certified_best", "k_grid", "prune_descending",
-           "MAX_BRUTEFORCE_CANDIDATES"]
+           "MAX_BRUTEFORCE_CANDIDATES", "GREEDY_SCREEN_MIN_N"]
 
 # Hard cap on the brute-force combinatorial grid: above this many combos the
 # enumeration can neither be ranked (B floats) nor walked in reasonable time,
@@ -62,6 +62,10 @@ _K_GRID_MAX = 24          # k-nearest sweep: log-spaced ks instead of 1..n-1
 _COMMON_GRID_MAX = 48     # common-rate sweep: subsampled distinct capacities
 _CERT_BUDGET = 16         # exact-eig certifications per sweep before fallback
 _CHUNK_ELEMS = 2**23      # max floats per (B, n, n) candidate chunk (~64 MB)
+GREEDY_SCREEN_MIN_N = 32  # above this, solve_greedy pre-screens with power
+                          # iteration and certifies only the winner per raise
+_OPTIMISTIC_CERTS = 4     # screened greedy: exact certs tried ascending-t
+                          # before paying for the power-iteration pre-screen
 
 
 @dataclasses.dataclass(frozen=True)
@@ -470,13 +474,26 @@ def solve_greedy(
     lambda_target: float,
     reception_based: bool = False,
     max_iters: int = 10_000,
+    screen: bool | None = None,
 ) -> RateSolution:
     """Start dense (every node at its minimum row capacity => maximal
     connectivity) and greedily raise one node's rate to its next candidate.
     All <= n single-raises of an iteration are scored in one batched pass;
     the pick (best strict t_com improvement that stays feasible, ties to the
-    lowest node index) matches the reference's sequential scan."""
+    lowest node index) matches the reference's sequential scan.
+
+    ``screen`` (default: ``n > GREEDY_SCREEN_MIN_N``) swaps the per-iteration
+    exact eigendecomposition of all <= n trials for the lazy certify-on-
+    winner walk of ``_greedy_screened_pick`` (optimistic exact certs, then
+    ``certified_best``'s power-iteration pre-screen, then an exact-batch
+    fallback). Mid-size scenarios (the n=64 planner cliff) drop from O(n)
+    exact eigs per raise to a handful, while every pick stays bit-identical
+    to the unscreened scan: each accepted raise is exactly certified, and
+    every improving trial with a smaller t than the winner is exactly
+    certified infeasible before the winner is accepted."""
     n = capacity.shape[0]
+    if screen is None:
+        screen = n > GREEDY_SCREEN_MIN_N
     per_node = _per_node_candidates(capacity)  # descending
     idx = np.array([len(per_node[i]) - 1 for i in range(n)])     # start = slowest/densest
     rates = np.array([per_node[i][idx[i]] for i in range(n)])
@@ -490,6 +507,16 @@ def solve_greedy(
         trials = np.repeat(rates[None, :], movable.size, axis=0)
         for r, i in enumerate(movable):
             trials[r, i] = per_node[i][idx[i] - 1]
+        if screen:
+            accepted = _greedy_screened_pick(
+                capacity, trials, model_bits, lambda_target, reception_based,
+                cur.t_com_s)
+            if accepted is None:
+                break
+            r, cur = accepted
+            idx[int(movable[r])] -= 1
+            rates = cur.rates_bps
+            continue
         t, _, feas = evaluate_rates_batch(capacity, trials, model_bits,
                                           lambda_target, reception_based)
         ok = feas & (t < cur.t_com_s - 1e-15)
@@ -502,6 +529,94 @@ def solve_greedy(
                         reception_based)
         rates = cur.rates_bps
     return cur
+
+
+def _greedy_screened_pick(
+    capacity: np.ndarray,
+    trials: np.ndarray,
+    model_bits: float,
+    lambda_target: float,
+    reception_based: bool,
+    t_cur: float,
+) -> tuple[int, RateSolution] | None:
+    """One screened greedy iteration over the (B, n) single-raise trials.
+
+    Three phases, all certifying with the exact ``_evaluate`` (a single
+    n x n eig, so certifying a handful beats eig-ing all B trials):
+
+    1. optimistic: walk improving trials in ascending-t order and certify
+       the first few directly. Early in the greedy nearly every raise stays
+       feasible, so this phase usually returns after ONE exact eig — vs the
+       unscreened path's B exact eigs per round — and its pick is exactly
+       the unscreened scan's (first feasible ascending-t).
+    2. pre-screen: only near the feasibility frontier (phase 1 exhausted),
+       rank the remaining improving trials with the power-iteration lambda
+       estimate and certify estimate-feasible picks ascending-t —
+       ``certified_best``'s recipe, run lazily. Before accepting a winner,
+       its estimate-rejected ascending-t prefix is certified too, so an
+       estimate misjudgment can never flip the pick.
+    3. exact fallback: if the estimate's picks all fail, batch-eig whatever
+       remains uncertified, exactly like the unscreened scan — so the
+       greedy never terminates early on an estimate misjudgment.
+
+    Every trial with a smaller t than the returned winner has been exactly
+    certified infeasible, so the pick is bit-identical to the unscreened
+    scan's (first feasible ascending-t, ties to the lowest node index —
+    ``np.argsort(kind="stable")`` preserves the tie order).
+
+    Returns ``(row, solution)`` for the first certified strict improvement,
+    or None when no improving trial is truly feasible."""
+    t = tdm_time_batch_s(model_bits, trials)
+    improving = t < t_cur - 1e-15
+    if not improving.any():
+        return None
+    by_t = [int(r) for r in np.argsort(t, kind="stable") if improving[r]]
+    optimistic = by_t[:_OPTIMISTIC_CERTS]
+    for r in optimistic:
+        sol = _evaluate(capacity, trials[r], model_bits, lambda_target,
+                        reception_based)
+        if sol.feasible and sol.t_com_s < t_cur - 1e-15:
+            # same pick as the unscreened scan: first feasible ascending-t
+            return r, sol
+    rest = by_t[_OPTIMISTIC_CERTS:]
+    if not rest:
+        return None
+    lam_est = _lambda_iter_chunked(capacity, trials[rest], reception_based, 32)
+    est_ok = lam_est <= lambda_target + 1e-9
+    skipped = []  # estimate-rejected, ascending-t, uncertified so far
+    for k, r in enumerate(rest):
+        if not est_ok[k]:
+            skipped.append(r)
+            continue
+        sol = _evaluate(capacity, trials[r], model_bits, lambda_target,
+                        reception_based)
+        if sol.feasible and sol.t_com_s < t_cur - 1e-15:
+            # The estimate may have wrongly rejected a feasible raise with a
+            # smaller t: certify the skipped prefix before accepting, so the
+            # screened pick is ALWAYS the unscreened scan's (every trial
+            # below the accepted t has been exactly certified by now).
+            for s in skipped:
+                s_sol = _evaluate(capacity, trials[s], model_bits,
+                                  lambda_target, reception_based)
+                if s_sol.feasible and s_sol.t_com_s < t_cur - 1e-15:
+                    return s, s_sol
+            return r, sol
+    # Last resort — the estimate rejected everything that remains (or its
+    # picks all failed certification): score the skipped trials in one
+    # exact batch, exactly like the unscreened scan. This only runs at the
+    # feasibility frontier (a handful of rounds), so the screened path
+    # keeps the unscreened solution — never terminating the greedy early
+    # on an estimate misjudgment — at a fraction of the cost.
+    if not skipped:
+        return None
+    tt, _, feas = evaluate_rates_batch(capacity, trials[skipped], model_bits,
+                                       lambda_target, reception_based)
+    ok = feas & (tt < t_cur - 1e-15)
+    if not ok.any():
+        return None
+    r = skipped[int(np.argmin(np.where(ok, tt, np.inf)))]
+    return r, _evaluate(capacity, trials[r], model_bits, lambda_target,
+                        reception_based)
 
 
 # ---------------------------------------------------------------------------

@@ -7,7 +7,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "replica_axes", "tp_size"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_fleet_mesh",
+           "replica_axes", "tp_size"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -30,10 +31,30 @@ def make_host_mesh(data: int = 4, model: int = 2):
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
 
 
+def make_fleet_mesh(fleet: int = 2, model: int = 2):
+    """Mesh for D-PSGD on real models: node-parameters shard their leading
+    node axis over 'fleet' (``train.shardings.node_param_specs``) and each
+    node's tensors shard over 'model' (the TP rules), so node count and
+    model size scale independently. ``fleet * model`` must not exceed the
+    visible device count (multi-device CPU CI gets 8 via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    avail = jax.device_count()
+    if fleet * model > avail:
+        raise ValueError(
+            f"fleet mesh needs {fleet}x{model}={fleet * model} devices but "
+            f"only {avail} are visible (set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            "importing jax)")
+    axt = getattr(jax.sharding, "AxisType", None)  # jax >= 0.5 only
+    kw = {"axis_types": (axt.Auto,) * 2} if axt is not None else {}
+    return jax.make_mesh((fleet, model), ("fleet", "model"), **kw)
+
+
 def replica_axes(mesh) -> tuple[str, ...]:
     """The D-PSGD node axes = every axis except 'model'."""
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
 def tp_size(mesh) -> int:
-    return mesh.shape["model"]
+    """TP degree of the mesh — 1 when it carries no 'model' axis."""
+    return int(mesh.shape["model"]) if "model" in mesh.axis_names else 1

@@ -32,7 +32,9 @@ Modules:
   precomputed traces, ``vmap`` over Monte-Carlo (seed, scenario) batches
 """
 from ..core.compression import QuantConfig
-from .batch import train_cnn_on_traces, train_on_trace, train_on_traces
+from .batch import (ModelAdapter, train_cnn_on_traces, train_model_on_traces,
+                    train_on_trace, train_on_trace_reference, train_on_traces,
+                    transformer_adapter)
 from .events import Event, EventKind, EventQueue, SimClock
 from .fading import FadingChannel, FadingParams
 from .faults import FaultParams, FaultSchedule, RoundFaults
@@ -69,5 +71,7 @@ __all__ = [
     "RoundContext", "RoundRecord", "SimTrace", "TraceBatch", "TrainTrace",
     "WirelessSimulator", "precompute_trace", "precompute_traces",
     "simulate_dpsgd_cnn", "stack_traces", "sweep",
-    "train_cnn_on_traces", "train_on_trace", "train_on_traces",
+    "ModelAdapter", "train_cnn_on_traces", "train_model_on_traces",
+    "train_on_trace", "train_on_trace_reference", "train_on_traces",
+    "transformer_adapter",
 ]

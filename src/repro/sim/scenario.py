@@ -83,6 +83,13 @@ SCENARIO_PAYLOAD_MODES = PAYLOAD_MODES + ("auto",)
 DEFAULT_MODEL_BITS = 21_840 * 32.0
 
 
+def _prod(shape) -> int:
+    out = 1
+    for d in shape:
+        out *= int(d)
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class ScenarioConfig:
     """Everything a simulator run needs, frozen and hashable."""
@@ -101,6 +108,12 @@ class ScenarioConfig:
     fading_margin_bps: float = 0.0
     # workload
     model_bits: float = DEFAULT_MODEL_BITS
+    # leaf shapes of the model's parameter pytree (tuple of shape tuples,
+    # hashable). Empty = unknown/flat-buffer workload (every pre-pytree
+    # config): wire accounting treats model_bits as one message buffer.
+    # Set (sim.batch.transformer_adapter does) it lets wire_bits() charge
+    # the exact per-leaf framing that payload.granularity="leaf" implies.
+    model_shapes: tuple = ()
     # gossip payload compression (core.compression): what actually crosses
     # the air. Eq. 3 / the RA slot clock charge wire_bits(), not model_bits.
     payload: QuantConfig = QuantConfig(mode="none")
@@ -172,6 +185,27 @@ class ScenarioConfig:
                 "policy=\"bass\" plans rates and transmit fractions; the "
                 "joint rate x payload sweep is not wired into sched_opt — "
                 "pick a concrete payload.mode")
+        if self.model_shapes:
+            shapes = tuple(tuple(int(d) for d in s) for s in self.model_shapes)
+            object.__setattr__(self, "model_shapes", shapes)
+            total_bits = sum(
+                32.0 * _prod(s) for s in shapes)
+            if abs(total_bits - self.model_bits) > 0.5:
+                raise ValueError(
+                    f"model_shapes sums to {total_bits} fp32 bits but "
+                    f"model_bits={self.model_bits}; the airtime model and "
+                    "the shape accounting would silently disagree")
+        if self.payload.granularity == "leaf":
+            if not self.model_shapes:
+                raise ValueError(
+                    "payload.granularity=\"leaf\" needs model_shapes: "
+                    "per-leaf framing cannot be charged from a flat "
+                    "model_bits count")
+            if self.payload.mode == "auto":
+                raise ValueError(
+                    "payload.mode=\"auto\" resolves wire bits through the "
+                    "scalar joint planner; per-leaf granularity needs a "
+                    "concrete mode")
         if self.degrade not in DEGRADE_MODES:
             raise ValueError(
                 f"degrade must be one of {DEGRADE_MODES}, "
@@ -196,12 +230,19 @@ class ScenarioConfig:
         """Exact bits one node's broadcast puts on the air under ``payload``
         — ``model_bits`` verbatim for ``"none"``, otherwise
         ``compression.payload_bits`` of the model's fp32 lane count (int8:
-        whole padded blocks + one fp32 scale each). ``"auto"`` has no fixed
-        answer: the joint planner resolves it per replan."""
+        whole padded blocks + one fp32 scale each). With ``model_shapes``
+        set this is ``compression.payload_bits_tree``, which additionally
+        charges the per-leaf tail padding when
+        ``payload.granularity == "leaf"`` (for ``"message"`` granularity
+        the tree and flat accountings agree exactly). ``"auto"`` has no
+        fixed answer: the joint planner resolves it per replan."""
         if self.payload.mode == "auto":
             raise ValueError(
                 "payload.mode=\"auto\" is resolved per replan by the joint "
                 "planner; ask the simulator (or its RoundRecords) instead")
+        if self.model_shapes:
+            from ..core.compression import payload_bits_tree
+            return payload_bits_tree(self.model_shapes, self.payload)
         from ..core.rate_opt import payload_wire_bits
         return payload_wire_bits(self.model_bits, self.payload.mode)
 

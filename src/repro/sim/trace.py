@@ -49,8 +49,8 @@ from .scenario import ScenarioConfig, get_scenario
 
 __all__ = ["RoundRecord", "SimTrace", "RoundContext", "WirelessSimulator",
            "TrainTrace", "TraceBatch", "precompute_trace", "precompute_traces",
-           "stack_traces", "driver_batch_indices", "simulate_dpsgd_cnn",
-           "sweep"]
+           "stack_traces", "driver_batch_indices", "model_batch_tokens",
+           "model_batch_tokens_reference", "simulate_dpsgd_cnn", "sweep"]
 
 
 @dataclasses.dataclass
@@ -740,6 +740,58 @@ def driver_batch_indices(seed: int, round_: int, n_live: int, per_node: int,
     which is what keeps them loss-for-loss interchangeable."""
     rng = np.random.default_rng((seed, 0xB0, round_))
     return rng.integers(0, per_node, size=(n_live, batch))
+
+
+def model_batch_tokens(seed: int, round_: int, n_live: int, batch: int,
+                       seq_len: int, vocab: int) -> np.ndarray:
+    """(n_live, batch, seq_len) int32 LM minibatches drawn at one round —
+    the pytree-model analogue of ``driver_batch_indices``, and like it THE
+    sampling contract shared by the batched scan path and the per-round
+    reference (``sim.batch.train_on_trace_reference``): row k feeds the
+    k-th live node in original-id order, so both paths see identical data
+    and their losses match to float tolerance.
+
+    The stream mirrors ``data.token_stream``'s structure (a shared bank of
+    repeated 8-grams mixed 70/30 with noise, so next-token loss is
+    reducible below log(vocab)) but is **stateless per round**: a
+    domain-tagged rng keyed by ``(seed, round)`` means any round of any
+    trace can be regenerated independently — no generator state to thread
+    through churn."""
+    bank = np.random.default_rng((seed, 0x70C)).integers(
+        0, vocab, size=(64, 8))
+    rng = np.random.default_rng((seed, 0x70C, round_))
+    rows = n_live * batch
+    chunks = -(-seq_len // 8)                     # ceil: 8-gram chunks
+    use_bank = rng.random((rows, chunks)) < 0.7
+    bank_idx = rng.integers(0, len(bank), size=(rows, chunks))
+    noise = rng.integers(0, vocab, size=(rows, chunks, 8))
+    toks = np.where(use_bank[..., None], bank[bank_idx], noise)
+    return (toks.reshape(rows, chunks * 8)[:, :seq_len]
+            .reshape(n_live, batch, seq_len).astype(np.int32))
+
+
+def model_batch_tokens_reference(seed: int, round_: int, n_live: int,
+                                 batch: int, seq_len: int,
+                                 vocab: int) -> np.ndarray:
+    """Sequential reference for ``model_batch_tokens``: same rng draws in
+    the same order, but each row assembled chunk by chunk in Python.
+    Retained so tests can pin the vectorized bank/noise gather bit for bit
+    (the sampling contract both training paths share)."""
+    bank = np.random.default_rng((seed, 0x70C)).integers(
+        0, vocab, size=(64, 8))
+    rng = np.random.default_rng((seed, 0x70C, round_))
+    rows = n_live * batch
+    chunks = -(-seq_len // 8)
+    use_bank = rng.random((rows, chunks)) < 0.7
+    bank_idx = rng.integers(0, len(bank), size=(rows, chunks))
+    noise = rng.integers(0, vocab, size=(rows, chunks, 8))
+    flat = np.empty((rows, chunks * 8), dtype=np.int64)
+    for i in range(rows):
+        for c in range(chunks):
+            gram = bank[bank_idx[i, c]] if use_bank[i, c] else noise[i, c]
+            flat[i, c * 8:(c + 1) * 8] = gram
+    return (flat[:, :seq_len]
+            .reshape(n_live, batch, seq_len).astype(np.int32))
 
 
 def simulate_dpsgd_cnn(

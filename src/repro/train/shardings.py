@@ -17,7 +17,8 @@ from jax.sharding import PartitionSpec as P
 
 PyTree = Any
 
-__all__ = ["param_specs", "cache_specs", "batch_specs", "prepend_axes"]
+__all__ = ["param_specs", "cache_specs", "batch_specs", "prepend_axes",
+           "node_param_specs"]
 
 # trailing-dim rules: name -> tuple over trailing dims ('model' | None)
 _W_RULES: dict[str, tuple] = {
@@ -151,3 +152,43 @@ def prepend_axes(specs: PyTree, axes) -> PyTree:
     def add(s: P) -> P:
         return P(axes, *tuple(s))
     return jax.tree.map(add, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def node_param_specs(params: PyTree, mesh,
+                     kv_dim: Optional[int] = None) -> PyTree:
+    """PartitionSpecs for **node-stacked** parameters: every leaf of
+    ``params`` carries the D-PSGD node axis first (``(n_nodes, *shape)``,
+    the ``dpsgd.replicate`` layout), and the spec shards that axis over
+    every mesh axis except ``'model'`` (the fleet axes) while the trailing
+    dims follow the per-path TP rules of ``param_specs``. Node count and
+    model size then scale independently: grow the fleet axes for more
+    nodes, grow 'model' for a bigger model.
+
+    The node axis only shards when ``n_nodes`` divides the fleet size
+    (otherwise it stays replicated, same policy as the TP rules dropping
+    'model' on non-divisible dims). Works with an
+    ``AbstractMesh`` — nothing here touches devices."""
+    axis_names = tuple(mesh.axis_names)
+    tp = int(mesh.shape["model"]) if "model" in axis_names else 1
+    node_axes = tuple(a for a in axis_names if a != "model")
+    fleet = 1
+    for a in node_axes:
+        fleet *= int(mesh.shape[a])
+    node_entry = node_axes if len(node_axes) > 1 else (
+        node_axes[0] if node_axes else None)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            raise ValueError(
+                f"node-stacked leaf at {jax.tree_util.keystr(path)!s} is a "
+                "scalar; every leaf must lead with the (n_nodes, ...) axis")
+        # _spec_for_path resolves the trailing-dim rule from the path and
+        # pads the extra leading (node) dim with None; swap that None for
+        # the fleet axes when the node count divides over them.
+        base = _spec_for_path(path, leaf, tp, kv_dim)
+        entries = list(tuple(base))
+        if node_entry is not None and fleet > 1 and leaf.shape[0] % fleet == 0:
+            entries[0] = node_entry
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
